@@ -1,0 +1,46 @@
+"""Pallas kernel microbenches vs jnp references.
+
+On this CPU host the kernels execute in interpret mode (Python), so absolute
+times are meaningless; we report the REFERENCE path timing (what XLA:CPU does
+with the same math) and validate kernel outputs, plus the roofline-relevant
+tile parameters. On TPU the same call sites compile to Mosaic."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops
+from repro.kernels.ref import intersect_ref, scoring_ref
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    B, N, d = 256, 4096, 128
+    q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    e = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    ref = jax.jit(lambda q, e: scoring_ref(q, e, 2.0, "dot"))
+    t = time_fn(ref, q, e)
+    emit("kernel/scoring/jnp_ref", t, f"B{B} N{N} d{d}")
+    out = ops.scoring(q[:8], e[:256], gamma=2.0, interpret=True)
+    err = float(jnp.max(jnp.abs(out - scoring_ref(q[:8], e[:256], 2.0, "dot"))))
+    emit("kernel/scoring/interpret_maxerr", 0.0, f"{err:.2e}")
+    emit("kernel/scoring/tiles", 0.0, "bm128 bn256 bk128 (MXU 128-aligned)")
+
+    n, k, dd, hd = 512, 3, 128, 256
+    x = jnp.asarray(rng.normal(size=(n, k, dd)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(dd, hd)) * 0.1, jnp.float32)
+    b1 = jnp.zeros((hd,))
+    w2 = jnp.asarray(rng.normal(size=(hd, 1)) * 0.1, jnp.float32)
+    b2 = jnp.zeros((1,))
+    ref2 = jax.jit(lambda *a: intersect_ref(*a))
+    t = time_fn(ref2, x, w1, b1, w2, b2)
+    emit("kernel/intersect/jnp_ref", t, f"n{n} k{k} d{dd}")
+    out = ops.intersect(x[:32], w1, b1, w2, b2, interpret=True)
+    err = float(jnp.max(jnp.abs(out - intersect_ref(x[:32], w1, b1, w2, b2))))
+    emit("kernel/intersect/interpret_maxerr", 0.0, f"{err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Table 6: per-operator execution time, baseline (fragmented per-query
+launches) vs batched (one pooled kernel). Reproduces the paper's ablation
+showing Intersect/Union gain the most (multi-input, high arithmetic
+intensity)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.models import ModelConfig, make_model
+
+
+def run(n_ops: int = 256, dim: int = 64, model_name: str = "betae") -> None:
+    model = make_model(model_name, ModelConfig(dim=dim))
+    params = model.init_params(jax.random.PRNGKey(0), 1000, 20)
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 1000, n_ops))
+    rels = jnp.asarray(rng.integers(0, 20, n_ops))
+    x = model.embed(params, ids)
+    stack3 = jnp.stack([x, x[::-1], x], axis=1)
+
+    cases = {
+        "EmbedE": (lambda p, i: model.embed(p, i), (params, ids),
+                   lambda p, i: model.embed(p, i[:1])),
+        "Project": (lambda p, v, r: model.project(p, v, r), (params, x, rels),
+                    lambda p, v, r: model.project(p, v[:1], r[:1])),
+        "Intersect": (lambda p, s: model.intersect(p, s), (params, stack3),
+                      lambda p, s: model.intersect(p, s[:1])),
+        "Union": (lambda p, s: model.union(p, s), (params, stack3),
+                  lambda p, s: model.union(p, s[:1])),
+        "Negate": (lambda p, v: model.negate(p, v), (params, x),
+                   lambda p, v: model.negate(p, v[:1])),
+    }
+    for name, (batched, args, single) in cases.items():
+        jb = jax.jit(batched)
+        js = jax.jit(single)
+        t_batched = time_fn(jb, *args)
+        t_single = time_fn(js, *args)          # one fragment
+        t_baseline = t_single * n_ops          # n_ops fragmented launches
+        emit(f"op/{name}/batched", t_batched, f"n={n_ops}")
+        emit(f"op/{name}/baseline_extrap", t_baseline, "per-query loop")
+        emit(f"op/{name}/speedup", 0.0, f"x{t_baseline / t_batched:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: tput,ops,sem,adaptive,"
+                         "freebase,scaling,kernels")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (adaptive, kernels_bench, operator_speedup,
+                            runtime_freebase, scaling, semantic, throughput)
+
+    suites = [
+        ("tput", "Table 3/1: operator-level vs query-level throughput",
+         lambda: (throughput.run(), throughput.run_schedule_stats())),
+        ("ops", "Table 6: per-operator batched speedup", operator_speedup.run),
+        ("sem", "Table 8/Fig 8: decoupled semantic integration", semantic.run),
+        ("adaptive", "Fig 9: adaptive sampling under shift", adaptive.run),
+        ("freebase", "Table 2: single-hop completion runtime", runtime_freebase.run),
+        ("scaling", "Fig 7/Table 2: multi-device structural scaling", scaling.run),
+        ("kernels", "Pallas kernel validation/micro", kernels_bench.run),
+    ]
+    print("name,us_per_call,derived")
+    for key, desc, fn in suites:
+        if want and key not in want:
+            continue
+        print(f"# {desc}", flush=True)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            print(f"{key}/ERROR,0.0,failed")
+
+
+if __name__ == "__main__":
+    main()

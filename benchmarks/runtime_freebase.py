@@ -1,0 +1,36 @@
+"""Table 2: single-hop (KG completion) runtime — ComplEx d=100 on a Freebase
+stand-in. Reports epoch time on this host plus derived triples/sec; the
+multi-GPU columns of Table 2 are covered structurally by benchmarks/scaling.py
+(per-device FLOPs halve per device-count doubling)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import QueryInstance
+from repro.data import load_dataset
+from repro.models import ModelConfig, make_model
+from repro.training import AdamConfig, NGDBTrainer, TrainConfig
+
+
+def run(batch: int = 256, epoch_triples: int = 2048, dim: int = 100) -> None:
+    kg, _, _ = load_dataset("FB15k")  # reduced Freebase-family stand-in
+    model = make_model("complex", ModelConfig(dim=dim, gamma=6.0))
+    cfg = TrainConfig(batch_size=batch, n_negatives=32, b_max=512, prefetch=0,
+                      patterns=("1p",), adam=AdamConfig(lr=1e-3))
+    tr = NGDBTrainer(model, kg, cfg)
+    tr.train_step()  # warmup/compile
+    steps = max(epoch_triples // batch, 1)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        tr.train_step()
+    dt = time.perf_counter() - t0
+    emit("freebase/epoch_time_s", dt * 1e6 / steps, f"total={dt:.2f}s")
+    emit("freebase/triples_per_sec", 0.0, f"{steps * batch / dt:.0f}")
+    emit("freebase/model", 0.0, f"complex_d{dim}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""NGDB-Zoo on JAX: operator-level batched training for Neural Graph
+Databases, with decoupled semantic integration, an online query sampler,
+Pallas TPU kernels for the scoring/intersection/gather hot-spots, and a
+multi-pod distribution layer hosting the 10 assigned LM architectures."""
+
+__version__ = "1.0.0"
+
+from repro.core import (  # noqa: F401
+    OpType,
+    PooledExecutor,
+    QueryInstance,
+    QueryLevelExecutor,
+    answer_query,
+    build_batched_dag,
+    schedule,
+)
+from repro.data import KnowledgeGraph, generate_synthetic_kg, load_dataset  # noqa: F401
+from repro.models import ModelConfig, make_model, model_names  # noqa: F401
+from repro.sampling import AdaptiveDistribution, OnlineSampler  # noqa: F401
+from repro.semantic import StubPTE, precompute_semantic_table  # noqa: F401
+from repro.training import NGDBTrainer, TrainConfig, evaluate  # noqa: F401

@@ -1,0 +1,31 @@
+# The paper's primary contribution: operator-level batched training.
+from repro.core.executor import PooledExecutor, PreparedBatch, QueryLevelExecutor
+from repro.core.ops import OpType
+from repro.core.patterns import (
+    EVAL_PATTERNS,
+    NEGATION_PATTERNS,
+    PATTERN_NAMES,
+    TEMPLATES,
+    QueryInstance,
+    answer_query,
+)
+from repro.core.querydag import BatchedDAG, build_batched_dag
+from repro.core.scheduler import ExecutionSchedule, PoolStep, schedule
+
+__all__ = [
+    "OpType",
+    "TEMPLATES",
+    "PATTERN_NAMES",
+    "NEGATION_PATTERNS",
+    "EVAL_PATTERNS",
+    "QueryInstance",
+    "answer_query",
+    "BatchedDAG",
+    "build_batched_dag",
+    "ExecutionSchedule",
+    "PoolStep",
+    "schedule",
+    "PooledExecutor",
+    "QueryLevelExecutor",
+    "PreparedBatch",
+]

@@ -1,0 +1,17 @@
+from repro.data.kg import (
+    TABLE4,
+    KGStats,
+    KnowledgeGraph,
+    generate_synthetic_kg,
+    load_dataset,
+    split_kg,
+)
+
+__all__ = [
+    "TABLE4",
+    "KGStats",
+    "KnowledgeGraph",
+    "generate_synthetic_kg",
+    "load_dataset",
+    "split_kg",
+]

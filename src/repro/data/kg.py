@@ -1,0 +1,205 @@
+"""Knowledge-graph storage: triple store + CSR adjacency + synthetic generators.
+
+The container is offline, so the paper's six benchmark KGs (Table 4) are
+represented two ways:
+  * ``full``   — exact Table 4 statistics, used ONLY by the dry-run
+                 (ShapeDtypeStruct; never materialized).
+  * ``reduced``— small synthetic graphs with the same family (power-law
+                 degrees, same relation/entity ratio) for CPU tests and
+                 benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class KGStats:
+    """Table 4 row."""
+
+    name: str
+    n_entities: int
+    n_relations: int
+    n_train: int
+    n_valid: int
+    n_test: int
+
+    @property
+    def n_total(self) -> int:
+        return self.n_train + self.n_valid + self.n_test
+
+
+# Exact statistics from Table 4 of the paper.
+TABLE4: Dict[str, KGStats] = {
+    "FB15k": KGStats("FB15k", 14_951, 1_345, 483_142, 50_000, 59_071),
+    "FB15k-237": KGStats("FB15k-237", 14_505, 237, 272_115, 17_526, 20_438),
+    "NELL995": KGStats("NELL995", 63_361, 200, 114_213, 14_324, 14_267),
+    "FB400k": KGStats("FB400k", 409_829, 918, 1_075_837, 537_917, 537_917),
+    "ogbl-wikikg2": KGStats("ogbl-wikikg2", 2_500_604, 535, 16_109_182, 429_456, 598_543),
+    "ATLAS-Wiki-Triple-4M": KGStats(
+        "ATLAS-Wiki-Triple-4M", 4_035_238, 512_064, 23_040_868, 2_880_108, 2_880_110
+    ),
+}
+
+
+class KnowledgeGraph:
+    """Immutable triple store with CSR adjacency for fast traversal.
+
+    Adjacency is keyed by (head, relation) via a sorted (h * R + r) index so
+    ``neighbors(h, r)`` is two binary searches — the access pattern the online
+    sampler (App. F) hammers.
+    """
+
+    def __init__(self, n_entities: int, n_relations: int, triples: np.ndarray, name: str = "kg"):
+        assert triples.ndim == 2 and triples.shape[1] == 3
+        self.name = name
+        self.n_entities = int(n_entities)
+        self.n_relations = int(n_relations)
+        # Deduplicate and sort by (h, r, t).
+        key = (
+            triples[:, 0].astype(np.int64) * n_relations + triples[:, 1].astype(np.int64)
+        ) * n_entities + triples[:, 2].astype(np.int64)
+        order = np.argsort(key, kind="stable")
+        key = key[order]
+        keep = np.concatenate([[True], key[1:] != key[:-1]])
+        self.triples = triples[order][keep].astype(np.int64)
+        # CSR over (h, r).
+        self._hr = self.triples[:, 0] * n_relations + self.triples[:, 1]
+        self._tails = np.ascontiguousarray(self.triples[:, 2])
+
+    def __len__(self) -> int:
+        return self.triples.shape[0]
+
+    def neighbors(self, h: int, r: int) -> np.ndarray:
+        """All tails t with (h, r, t) in the graph."""
+        hr = h * self.n_relations + r
+        lo = np.searchsorted(self._hr, hr, side="left")
+        hi = np.searchsorted(self._hr, hr, side="right")
+        return self._tails[lo:hi]
+
+    def neighbors_of_set(self, heads: np.ndarray, r: int) -> np.ndarray:
+        """Union of tails over a set of heads for one relation (Project op)."""
+        if len(heads) == 0:
+            return np.empty((0,), dtype=np.int64)
+        hr = np.asarray(heads, dtype=np.int64) * self.n_relations + r
+        lo = np.searchsorted(self._hr, hr, side="left")
+        hi = np.searchsorted(self._hr, hr, side="right")
+        parts = [self._tails[a:b] for a, b in zip(lo, hi) if b > a]
+        if not parts:
+            return np.empty((0,), dtype=np.int64)
+        return np.unique(np.concatenate(parts))
+
+    @cached_property
+    def out_degree(self) -> np.ndarray:
+        deg = np.zeros(self.n_entities, dtype=np.int64)
+        np.add.at(deg, self.triples[:, 0], 1)
+        return deg
+
+    @cached_property
+    def degree(self) -> np.ndarray:
+        deg = np.zeros(self.n_entities, dtype=np.int64)
+        np.add.at(deg, self.triples[:, 0], 1)
+        np.add.at(deg, self.triples[:, 2], 1)
+        return deg
+
+    @cached_property
+    def edges_with_outgoing(self) -> np.ndarray:
+        """Entities with at least one outgoing edge (valid anchor starts)."""
+        return np.unique(self.triples[:, 0])
+
+    @cached_property
+    def relations_by_head(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """CSR (indptr, relations, tails) grouped by head for random walks."""
+        order = np.argsort(self.triples[:, 0], kind="stable")
+        heads = self.triples[order, 0]
+        indptr = np.searchsorted(heads, np.arange(self.n_entities + 1))
+        return indptr, self.triples[order, 1], self.triples[order, 2]
+
+    @cached_property
+    def incoming_by_tail(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """CSR (indptr, relations, heads) grouped by tail — used by the online
+        sampler's backward ground-truth instantiation (App. F)."""
+        order = np.argsort(self.triples[:, 2], kind="stable")
+        tails = self.triples[order, 2]
+        indptr = np.searchsorted(tails, np.arange(self.n_entities + 1))
+        return indptr, self.triples[order, 1], self.triples[order, 0]
+
+    @cached_property
+    def entities_with_incoming(self) -> np.ndarray:
+        return np.unique(self.triples[:, 2])
+
+
+def generate_synthetic_kg(
+    n_entities: int,
+    n_relations: int,
+    n_triples: int,
+    seed: int = 0,
+    hub_exponent: float = 0.8,
+    name: str = "synthetic",
+) -> KnowledgeGraph:
+    """Power-law synthetic KG (degree-weighted, matching App. C's sampling).
+
+    Head/tail entities are drawn from a Zipf-like distribution so the graph
+    has hub structure like FB15k/wikikg2; relation usage is also skewed.
+    """
+    rng = np.random.default_rng(seed)
+    ent_w = (np.arange(1, n_entities + 1, dtype=np.float64)) ** (-hub_exponent)
+    ent_p = ent_w / ent_w.sum()
+    rel_w = (np.arange(1, n_relations + 1, dtype=np.float64)) ** (-0.5)
+    rel_p = rel_w / rel_w.sum()
+    # Oversample then dedup to hit ~n_triples unique triples.
+    m = int(n_triples * 1.3) + 16
+    h = rng.choice(n_entities, size=m, p=ent_p)
+    t = rng.choice(n_entities, size=m, p=ent_p)
+    r = rng.choice(n_relations, size=m, p=rel_p)
+    tri = np.stack([h, r, t], axis=1)
+    kg = KnowledgeGraph(n_entities, n_relations, tri, name=name)
+    if len(kg) > n_triples:
+        keep = rng.choice(len(kg), size=n_triples, replace=False)
+        kg = KnowledgeGraph(n_entities, n_relations, kg.triples[keep], name=name)
+    return kg
+
+
+def split_kg(kg: KnowledgeGraph, valid_frac: float = 0.05, test_frac: float = 0.05, seed: int = 0):
+    """Edge split into (train_kg, valid_edges, test_edges) — the Predictive
+    Query Answering setting: G_train ⊂ G_full."""
+    rng = np.random.default_rng(seed)
+    n = len(kg)
+    perm = rng.permutation(n)
+    n_valid = int(n * valid_frac)
+    n_test = int(n * test_frac)
+    valid = kg.triples[perm[:n_valid]]
+    test = kg.triples[perm[n_valid : n_valid + n_test]]
+    train = kg.triples[perm[n_valid + n_test :]]
+    train_kg = KnowledgeGraph(kg.n_entities, kg.n_relations, train, name=kg.name + "-train")
+    return train_kg, valid, test
+
+
+# Reduced stand-ins used on CPU (same family, ~1000x smaller).
+REDUCED_SCALE: Dict[str, Tuple[int, int, int]] = {
+    # name -> (entities, relations, triples)
+    "FB15k": (600, 40, 8000),
+    "FB15k-237": (580, 24, 5000),
+    "NELL995": (900, 20, 2500),
+    "FB400k": (2000, 60, 9000),
+    "ogbl-wikikg2": (4000, 50, 24000),
+    "ATLAS-Wiki-Triple-4M": (6000, 200, 34000),
+}
+
+
+def load_dataset(name: str, reduced: bool = True, seed: int = 0):
+    """Returns (train_kg, full_kg, stats). ``reduced`` is mandatory on CPU;
+    full-scale graphs exist only as ShapeDtypeStructs in the dry-run."""
+    stats = TABLE4[name]
+    if not reduced:
+        raise RuntimeError(
+            "Full-scale KGs are dry-run-only in this container; use reduced=True."
+        )
+    e, r, t = REDUCED_SCALE[name]
+    full = generate_synthetic_kg(e, r, t, seed=seed, name=name)
+    train_kg, _, _ = split_kg(full, seed=seed)
+    return train_kg, full, stats

@@ -1,0 +1,104 @@
+"""Producer/consumer data pipeline (§4.3 "Heterogeneous Pipelining").
+
+While the accelerator executes the current pooled batch, host workers sample
+the next queries (CSR traversal + rejection sampling are pure numpy and
+release the GIL in the hot loops). This is the TPU analogue of the paper's
+CPU↔GPU pipeline: the host side overlaps with async-dispatched device steps.
+
+Straggler mitigation: multiple producers feed one queue; a slow producer
+(e.g. pathological rejection sampling streak) cannot stall training because
+consumption order is whoever-finishes-first, and a watchdog re-issues work
+items that exceed a deadline.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import List, Optional
+
+from repro.sampling.online import OnlineSampler, SampledQuery
+
+
+class BatchPrefetcher:
+    def __init__(
+        self,
+        sampler: OnlineSampler,
+        batch_size: int,
+        depth: int = 2,
+        workers: int = 2,
+        deadline_s: float = 30.0,
+    ):
+        self.sampler = sampler
+        self.batch_size = batch_size
+        self.deadline_s = deadline_s
+        self._q: "queue.Queue[List[SampledQuery]]" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._inflight = 0
+        self._lock = threading.Lock()
+        self._last_progress = time.monotonic()
+        self.restarts = 0
+        self._threads = [
+            threading.Thread(target=self._produce, args=(i,), daemon=True)
+            for i in range(workers)
+        ]
+        for t in self._threads:
+            t.start()
+        self._watchdog = threading.Thread(target=self._watch, daemon=True)
+        self._watchdog.start()
+
+    def _produce(self, worker_id: int) -> None:
+        # Each worker gets an independent RNG stream so batches differ.
+        import numpy as np
+
+        local = OnlineSampler(
+            self.sampler.kg,
+            patterns=self.sampler.patterns,
+            seed=hash((id(self), worker_id)) % (2**31),
+            max_rejects=self.sampler.max_rejects,
+            max_answers=self.sampler.max_answers,
+        )
+        while not self._stop.is_set():
+            try:
+                batch = local.sample_batch(self.batch_size)
+            except RuntimeError:
+                continue  # rejection streak: drop and retry (straggler-safe)
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.25)
+                    with self._lock:
+                        self._last_progress = time.monotonic()
+                    break
+                except queue.Full:
+                    continue
+
+    def _watch(self) -> None:
+        """Restart a producer if the queue has been starved past deadline."""
+        while not self._stop.is_set():
+            time.sleep(self.deadline_s / 4)
+            with self._lock:
+                starved = (
+                    self._q.empty()
+                    and time.monotonic() - self._last_progress > self.deadline_s
+                )
+            if starved:
+                self.restarts += 1
+                t = threading.Thread(
+                    target=self._produce, args=(len(self._threads) + self.restarts,),
+                    daemon=True,
+                )
+                t.start()
+                self._threads.append(t)
+                with self._lock:
+                    self._last_progress = time.monotonic()
+
+    def next(self, timeout: float = 120.0) -> List[SampledQuery]:
+        return self._q.get(timeout=timeout)
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

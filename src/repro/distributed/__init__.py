@@ -1,0 +1,18 @@
+from repro.distributed.pipeline_parallel import bubble_fraction, gpipe_forward
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    dp_axes,
+    param_spec,
+    tree_param_shardings,
+)
+
+__all__ = [
+    "param_spec",
+    "tree_param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "dp_axes",
+    "gpipe_forward",
+    "bubble_fraction",
+]

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: GPU(HBM)-resident semantic integration (Eq. 11 + 12).
+
+e_fused = sigmoid(W_f [h_str[ids] ⊕ (h_sem[ids] W_p + b_p)] + b_f) * 2 - 1
+
+The tables stay in HBM (pltpu.ANY); each grid step DMAs exactly the rows it
+needs into VMEM using scalar-prefetched indices (PrefetchScalarGridSpec) —
+the TPU analogue of the paper's "high-speed tensor indexing" gather: the
+semantic manifold is never densified or round-tripped, and the projection +
+concat + affine + activation all happen in VMEM right after the row DMA.
+
+Rows are processed in blocks of ``rows`` per grid step; callers pad ids.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_fuse_kernel(ids_ref, hstr_ref, hsem_ref, wp_ref, bp_ref, wf_ref, bf_ref, o_ref,
+                        *, rows: int):
+    h = hstr_ref[...].astype(jnp.float32)                    # [rows, d]
+    z = hsem_ref[...].astype(jnp.float32)                    # [rows, dl]
+    zp = (
+        jax.lax.dot_general(z, wp_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + bp_ref[...].astype(jnp.float32)
+    )                                                        # [rows, dp]
+    x = jnp.concatenate([h, zp], axis=-1)                    # [rows, d+dp]
+    y = (
+        jax.lax.dot_general(x, wf_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + bf_ref[...].astype(jnp.float32)
+    )
+    o_ref[...] = (jax.nn.sigmoid(y) * 2.0 - 1.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def gather_fuse_pallas(
+    ids: jnp.ndarray,    # [n] int32 — row indices into both tables
+    h_str: jnp.ndarray,  # [E, d]
+    h_sem: jnp.ndarray,  # [E, dl]  (the frozen H_sem buffer)
+    wp: jnp.ndarray,     # [dl, dp]
+    bp: jnp.ndarray,     # [dp]
+    wf: jnp.ndarray,     # [d+dp, d]
+    bf: jnp.ndarray,     # [d]
+    *,
+    rows: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = ids.shape[0]
+    E, d = h_str.shape
+    _, dl = h_sem.shape
+    dp = wp.shape[1]
+    assert n % rows == 0, (n, rows)
+    # Block index i selects rows [ids[i*rows + r] for r in range(rows)]; with
+    # a row-blocked table BlockSpec the index_map returns the *row block* to
+    # DMA. We gather row-by-row (block height 1) and let the grid supply the
+    # row position — the standard Pallas scalar-prefetch gather pattern.
+    grid = (n,)
+
+    def tbl_map(i, ids_ref):
+        return (ids_ref[i], 0)
+
+    out = pl.pallas_call(
+        functools.partial(_gather_fuse_kernel, rows=1),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), tbl_map),
+                pl.BlockSpec((1, dl), tbl_map),
+                pl.BlockSpec((dl, dp), lambda i, ids_ref: (0, 0)),
+                pl.BlockSpec((1, dp), lambda i, ids_ref: (0, 0)),
+                pl.BlockSpec((d + dp, d), lambda i, ids_ref: (0, 0)),
+                pl.BlockSpec((1, d), lambda i, ids_ref: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, ids_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), h_str.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), h_str, h_sem, wp, bp.reshape(1, dp), wf, bf.reshape(1, d))
+    return out

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: cardinality-class attention intersection (Eq. 8/9).
+
+One equivalence class C_k (all intersections with the same input cardinality
+k) executes as one VMEM-resident fusion: 2-layer MLP attention logits →
+softmax over the k inputs → weighted combine. The whole chain — two small
+matmuls, softmax, reduce — runs on one [bn, k, d] tile without HBM
+round-trips, which is exactly where the paper's 13.1× per-operator win comes
+from (fragmented per-query launches → dense class-wide fusion).
+
+k is a *static* kernel parameter (one compiled kernel per equivalence class,
+mirroring Eq. 8); d and the MLP hidden dim are padded to 128 lanes by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _intersect_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)                      # [bn, k, d]
+    w1 = w1_ref[...].astype(jnp.float32)                    # [d, hd]
+    b1 = b1_ref[...].astype(jnp.float32)                    # [1, hd]
+    w2 = w2_ref[...].astype(jnp.float32)                    # [hd, 1... padded 128]
+    b2 = b2_ref[...].astype(jnp.float32)                    # [1, pad]
+    bn, kk, d = x.shape
+    h = jnp.maximum(
+        jax.lax.dot_general(
+            x.reshape(bn * kk, d), w1, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b1,
+        0.0,
+    )                                                        # [bn*k, hd]
+    logits = (
+        jax.lax.dot_general(h, w2, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + b2
+    )[:, :1].reshape(bn, kk)                                 # [bn, k]
+    att = jax.nn.softmax(logits, axis=1)
+    o_ref[...] = jnp.einsum("nk,nkd->nd", att, x).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def intersect_pallas(
+    x: jnp.ndarray,   # [n, k, d]
+    w1: jnp.ndarray,  # [d, hd]
+    b1: jnp.ndarray,  # [hd]
+    w2: jnp.ndarray,  # [hd, pad] (col 0 = real logit weights)
+    b2: jnp.ndarray,  # [pad]
+    *,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n, k, d = x.shape
+    hd = w1.shape[1]
+    pad = w2.shape[1]
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_intersect_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d, hd), lambda i: (0, 0)),
+            pl.BlockSpec((1, hd), lambda i: (0, 0)),
+            pl.BlockSpec((hd, pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+    )(x, w1, b1.reshape(1, hd), w2, b2.reshape(1, pad))

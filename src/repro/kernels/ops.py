@@ -1,0 +1,79 @@
+"""Jitted public wrappers for the Pallas kernels: shape padding to hardware
+tiles, dtype handling, and interpret-mode fallback on CPU hosts.
+
+On a CPU host (this container) the kernels run with interpret=True, which
+executes the kernel body in Python — bit-accurate semantics, no TPU needed.
+On TPU the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.gather_fuse import gather_fuse_pallas
+from repro.kernels.intersect import intersect_pallas
+from repro.kernels.scoring import scoring_pallas
+
+_LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def scoring(q, e, gamma: float = 0.0, mode: str = "dot",
+            bm: int = 128, bn: int = 256, bk: int = 128,
+            interpret: bool | None = None):
+    """Padded/unpadded entry to the scoring kernel. q [B,d], e [N,d]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, d = q.shape
+    N = e.shape[0]
+    bm_ = min(bm, max(8, 1 << int(np.ceil(np.log2(max(B, 1))))))
+    bn_ = min(bn, max(_LANE, 1 << int(np.ceil(np.log2(max(N, 1))))))
+    qp = _pad_to(_pad_to(q, 0, bm_), 1, bk)
+    ep = _pad_to(_pad_to(e, 0, bn_), 1, bk)
+    out = scoring_pallas(qp, ep, gamma=gamma, mode=mode, bm=bm_, bn=bn_, bk=bk,
+                         interpret=interpret)
+    return out[:B, :N]
+
+
+def intersect(x, w1, b1, w2, b2, bn: int = 256, interpret: bool | None = None):
+    """x [n,k,d], MLP (w1 [d,hd], b1, w2 [hd,1], b2 [1]) -> [n,d]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, k, d = x.shape
+    bn_ = min(bn, max(8, 1 << int(np.ceil(np.log2(max(n, 1))))))
+    xp = _pad_to(x, 0, bn_)
+    # Pad the logit head to a full lane so the tile is hardware-aligned.
+    w2p = _pad_to(w2, 1, _LANE)
+    b2p = _pad_to(b2, 0, _LANE)
+    out = intersect_pallas(xp, w1, b1, w2p, b2p, bn=bn_, interpret=interpret)
+    return out[:n]
+
+
+def gather_fuse(ids, h_str, h_sem, wp, bp, wf, bf, interpret: bool | None = None):
+    """ids [n] -> fused entity vectors [n, d] (Eq. 11+12)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return gather_fuse_pallas(ids, h_str, h_sem, wp, bp, wf, bf, interpret=interpret)
+
+
+# Re-exported oracles (tests + fallback paths).
+scoring_ref = ref.scoring_ref
+intersect_ref = ref.intersect_ref
+gather_fuse_ref = ref.gather_fuse_ref

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match to float tolerance across the
+shape/dtype sweeps in tests/test_kernels_*.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scoring_ref(q: jnp.ndarray, e: jnp.ndarray, gamma: float = 0.0,
+                mode: str = "dot") -> jnp.ndarray:
+    """Vectorized logits (Eq. 6). q [B, d], e [N, d] -> [B, N].
+
+    mode=dot : gamma + q @ e.T      (inner-product geometries)
+    mode=l1  : gamma - sum |q - e|  (translational geometries)
+    """
+    if mode == "dot":
+        return gamma + q @ e.T
+    if mode == "l1":
+        return gamma - jnp.sum(jnp.abs(q[:, None, :] - e[None, :, :]), axis=-1)
+    raise ValueError(mode)
+
+
+def scoring_loss_ref(q, e_pos, e_neg, gamma: float, mode: str = "dot"):
+    """Fused negative-sampling loss over pos [B,d] and neg [B,K,d]."""
+    if mode == "dot":
+        s_pos = gamma + jnp.sum(q * e_pos, axis=-1)
+        s_neg = gamma + jnp.einsum("bd,bkd->bk", q, e_neg)
+    else:
+        s_pos = gamma - jnp.sum(jnp.abs(q - e_pos), axis=-1)
+        s_neg = gamma - jnp.sum(jnp.abs(q[:, None, :] - e_neg), axis=-1)
+    per = -jax.nn.log_sigmoid(s_pos) - jnp.mean(jax.nn.log_sigmoid(-s_neg), axis=-1)
+    return per
+
+
+def intersect_ref(x: jnp.ndarray, w1, b1, w2, b2) -> jnp.ndarray:
+    """Cardinality-class attention intersection (Eq. 8/9).
+
+    x [n, k, d]; attention logits from a 2-layer MLP; softmax over k;
+    weighted combine. Matches BetaE/Q2B-style intersection."""
+    h = jax.nn.relu(x @ w1 + b1)           # [n, k, hd]
+    logits = h @ w2 + b2                   # [n, k, 1]
+    att = jax.nn.softmax(logits, axis=1)
+    return jnp.sum(att * x, axis=1)
+
+
+def gather_fuse_ref(ids, h_str, h_sem, wp, bp, wf, bf) -> jnp.ndarray:
+    """GPU-resident semantic integration (Eq. 11 + 12).
+
+    ids [n]; h_str [E, d]; h_sem [E, dl]; project h_sem -> dp, concat, affine,
+    sigmoid*2-1. One fused memory pass per row."""
+    h = h_str[ids]
+    z = h_sem[ids] @ wp + bp
+    x = jnp.concatenate([h, z], axis=-1)
+    return jax.nn.sigmoid(x @ wf + bf) * 2.0 - 1.0

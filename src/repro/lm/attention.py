@@ -1,0 +1,179 @@
+"""GQA attention with RoPE / qk-norm / QKV-bias / sliding-window, in three
+execution modes:
+
+  * ``blockwise``  — flash-style chunked attention (lax.scan over KV blocks
+                     with online softmax). Never materializes [S, S]; this is
+                     what makes prefill_32k lowering memory-sane and is the
+                     jnp analogue of a Pallas flash kernel (the TPU kernel
+                     itself is a §Perf item; semantics identical).
+  * ``dense``      — reference path for short sequences and tests.
+  * ``decode``     — one query step against a KV cache (no materialization
+                     issue; softmax over the sharded S axis lowers to a
+                     partial-reduce + cross-shard combine, i.e. flash-decode).
+
+Shapes follow [B, S, H, hd]; GQA repeats KV heads by gathering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def dense_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Reference attention. q [B,Sq,H,hd], k/v [B,Sk,KV,hd].
+
+    GQA is computed in grouped form (no KV head repetition is materialized)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    n_rep = h // kv
+    qg = q.reshape(b, sq, kv, n_rep, hd)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32) * scale
+    sk = k.shape[1]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrqk,bkgd->bqgrd", probs, v).reshape(b, sq, h, hd)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_chunk: int = 1024, kv_chunk: int = 1024) -> jnp.ndarray:
+    """Flash-style attention: O(S·chunk) working set via online softmax.
+    Non-divisible lengths are zero-padded; padded keys are masked out and
+    padded queries sliced off."""
+    b, sq_orig, h, hd = q.shape
+    sk_orig = k.shape[1]
+    q_chunk = min(q_chunk, sq_orig)
+    kv_chunk = min(kv_chunk, sk_orig)
+    if sq_orig % q_chunk:
+        q = jnp.pad(q, ((0, 0), (0, (-sq_orig) % q_chunk), (0, 0), (0, 0)))
+    if sk_orig % kv_chunk:
+        pad = ((0, 0), (0, (-sk_orig) % kv_chunk), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    sq, sk = q.shape[1], k.shape[1]
+    n_rep = h // k.shape[2]
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / np.sqrt(hd)
+
+    k = k.reshape(b, nk, kv_chunk, k.shape[2], hd)
+    v = v.reshape(b, nk, kv_chunk, v.shape[2], hd)
+
+    def q_block(qi, q_blk):
+        # online softmax state: (m, l, acc)
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, h, hd), jnp.float32)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = _repeat_kv(k[:, ki], n_rep)        # [b, kc, h, hd]
+            vb = _repeat_kv(v[:, ki], n_rep)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q_blk, kb).astype(jnp.float32) * scale
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.broadcast_to(kpos[None, :] < sk_orig, (q_chunk, kv_chunk))
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+                "bhqk,bkhd->bqhd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        if causal:
+            # only scan blocks that intersect the causal frontier
+            n_valid = (qi + 1) * q_chunk  # kv positions needed
+            nk_q = (n_valid + kv_chunk - 1) // kv_chunk
+        else:
+            nk_q = nk
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk_q))
+        return acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+
+    outs = []
+    for qi in range(nq):  # unrolled over query chunks (few at 32k/1k)
+        outs.append(q_block(qi, q[:, qi * q_chunk : (qi + 1) * q_chunk]))
+    return jnp.concatenate(outs, axis=1)[:, :sq_orig].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0) -> jnp.ndarray:
+    """One-token attention. q [B,1,H,hd]; caches [B,S,KV,hd]; cache_len [B].
+
+    Grouped GQA form: the KV cache is read once, never repeated. When the S
+    axis of the cache is sharded, the softmax reductions lower to
+    partial-reduce + cross-shard combine (flash-decode)."""
+    b, sq, h, hd = q.shape
+    kv = k_cache.shape[2]
+    n_rep = h // kv
+    qg = q.reshape(b, sq, kv, n_rep, hd)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_cache).astype(jnp.float32) * scale
+    s = k_cache.shape[1]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos < cache_len[:, None]
+    if window > 0:
+        mask &= kpos >= (cache_len[:, None] - window)
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v_cache)
+    return out.reshape(b, sq, h, hd)
+
+
+def dense_chunked_attention(q, k, v, *, causal=True, window=0, q_chunk=1024):
+    """Python-unrolled q-chunk loop with STATIC causal/window K-slicing.
+
+    Same semantics as blockwise_attention but with no lax.scan, so
+    compiled.cost_analysis() counts every chunk (exact-cost dry-run mode) —
+    and the static frontier slicing drops the all-masked upper-triangle work."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    outs = []
+    nq = (sq + q_chunk - 1) // q_chunk
+    for qi in range(nq):
+        lo_q = qi * q_chunk
+        hi_q = min(lo_q + q_chunk, sq)
+        hi = min(hi_q, sk) if causal else sk
+        lo = max(0, lo_q + 1 - window) if window else 0
+        lo = (lo // 128) * 128  # keep slices lane-aligned
+        out = dense_attention(
+            q[:, lo_q:hi_q], k[:, lo:hi], v[:, lo:hi],
+            causal=causal, window=window, q_offset=lo_q - lo,
+        )
+        outs.append(out)
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(q, k, v, *, causal=True, window=0, mode="auto", q_offset=0):
+    if mode == "auto":
+        mode = "blockwise" if q.shape[1] * k.shape[1] > 4_194_304 else "dense"
+    if mode == "dense":
+        return dense_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    if mode == "dense_chunked":
+        return dense_chunked_attention(q, k, v, causal=causal, window=window)
+    return blockwise_attention(q, k, v, causal=causal, window=window)

@@ -1,0 +1,161 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) mixer.
+
+Training/prefill use the chunked SSD algorithm as a lax.scan over chunks:
+quadratic attention-like compute *within* a chunk (MXU-friendly [Q,Q] tiles),
+linear state recurrence *across* chunks (carry [B,H,P,N]). Decode is the O(1)
+recurrent update. The scan formulation keeps the working set at one chunk —
+the [c,h,Q,Q] full-decay tensor of the "minimal SSD" reference would be GBs
+at 32k prefill.
+
+Shapes: x [B,T,H,P]; dtA [B,T,H] (negative); Bm/Cm [B,T,G,N]; heads H map to
+groups G by contiguous blocks (rep = H // G).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a [..., Q] -> L [..., Q, Q] with L[i,j] = sum_{j<k<=i} a[k], -inf above
+    the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_scan(x, dtA, Bm, Cm, chunk: int, init_state=None, unroll: bool = False):
+    """Chunked SSD. Returns (y [B,T,H,P], final_state [B,H,P,N])."""
+    b, t, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    assert t % chunk == 0, (t, chunk)
+    c = t // chunk
+
+    xc = x.reshape(b, c, chunk, h, p)
+    ac = dtA.reshape(b, c, chunk, h)
+    bc = Bm.reshape(b, c, chunk, g, n)
+    cc = Cm.reshape(b, c, chunk, g, n)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        x_c, a_c, b_c, c_c = inp                       # [b,q,h,p] [b,q,h] [b,q,g,n]
+        a_cs = jnp.cumsum(a_c, axis=1)                 # [b,q,h]
+        L = jnp.exp(segsum(a_c.transpose(0, 2, 1)))    # [b,h,q,q]
+        # intra-chunk (attention-like) term, grouped heads
+        scores = jnp.einsum("bqgn,bsgn->bgqs", c_c, b_c)            # [b,g,q,s]
+        scores = jnp.repeat(scores, rep, axis=1)                     # [b,h,q,s]
+        y_diag = jnp.einsum("bhqs,bshp->bqhp", scores * L, x_c)
+        # inter-chunk: contribution of incoming state
+        state_decay = jnp.exp(a_cs)                                  # [b,q,h]
+        c_h = jnp.repeat(c_c, rep, axis=2) if g != h else c_c        # [b,q,h,n]
+        y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", c_h, state, state_decay)
+        # chunk state to carry forward
+        decay_states = jnp.exp(a_cs[:, -1:, :] - a_cs)               # [b,q,h]
+        b_h = jnp.repeat(b_c, rep, axis=2) if g != h else b_c
+        chunk_state = jnp.einsum("bqhn,bqh,bqhp->bhpn", b_h, decay_states, x_c)
+        new_state = state * jnp.exp(a_cs[:, -1, :])[..., None, None] + chunk_state
+        return new_state, (y_diag + y_off).astype(x.dtype)
+
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        ac.transpose(1, 0, 2, 3),
+        bc.transpose(1, 0, 2, 3, 4),
+        cc.transpose(1, 0, 2, 3, 4),
+    )
+    final_state, ys = jax.lax.scan(step, init_state, xs, unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(state, x, dtA, Bm, Cm):
+    """O(1) recurrence. x [B,H,P]; dtA [B,H]; Bm/Cm [B,G,N]; state [B,H,P,N]."""
+    h, g = x.shape[1], Bm.shape[1]
+    rep = h // g
+    b_h = jnp.repeat(Bm, rep, axis=1) if g != h else Bm              # [B,H,N]
+    c_h = jnp.repeat(Cm, rep, axis=1) if g != h else Cm
+    decay = jnp.exp(dtA)[..., None, None]                            # [B,H,1,1]
+    new_state = state * decay + jnp.einsum("bhn,bhp->bhpn", b_h, x)
+    y = jnp.einsum("bhn,bhpn->bhp", c_h, new_state)
+    return y.astype(x.dtype), new_state
+
+
+def causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width K. x [B,T,C]; w [K,C]; optional incoming
+    state [B,K-1,C]. Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    return y + b, new_state
+
+
+def mamba_mixer(h, lp, cfg, cache: Optional[dict] = None):
+    """Full Mamba2 block given pre-normed input h [B,T,D] and layer params lp.
+    Returns (out [B,T,D], new_cache)."""
+    B_, T, D = h.shape
+    din = cfg.d_inner
+    g, n = 1, cfg.ssm_state
+    nh, p = cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = h @ lp["in_proj"].astype(h.dtype)                    # [B,T,2din+2gn+nh]
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + g * n, 2 * din + 2 * g * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = cache.get("conv") if cache is not None else None
+    conv_out, new_conv = causal_conv(
+        conv_in, lp["conv_w"].astype(h.dtype), lp["conv_b"].astype(h.dtype), conv_state
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [din, din + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # [B,T,nh]
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))                 # [nh]
+    dtA = dt * A                                                   # [B,T,nh]
+    xh = xin.reshape(B_, T, nh, p)
+    x_dt = xh * dt[..., None].astype(xh.dtype)
+    Bm = Bm.reshape(B_, T, g, n)
+    Cm = Cm.reshape(B_, T, g, n)
+
+    if T == 1 and cache is not None:  # decode
+        y, new_state = ssd_decode_step(
+            cache["ssm"], x_dt[:, 0], dtA[:, 0], Bm[:, 0], Cm[:, 0]
+        )
+        y = y[:, None]
+    else:
+        chunk = min(cfg.ssm_chunk, T)
+        init = cache.get("ssm") if cache is not None else None
+        pad = (-T) % chunk
+        if pad:  # zero-pad to a chunk multiple: dtA=0 (decay 1) and x=0
+            # contribute nothing, so state and outputs are unaffected.
+            x_p = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a_p = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            y, new_state = ssd_scan(x_p, a_p, b_p, c_p, chunk, init_state=init,
+                                    unroll=cfg.exact_cost_mode)
+            y = y[:, :T]
+        else:
+            y, new_state = ssd_scan(x_dt, dtA, Bm, Cm, chunk, init_state=init,
+                                    unroll=cfg.exact_cost_mode)
+    y = y + lp["D_skip"].astype(h.dtype)[None, None, :, None] * xh
+    y = y.reshape(B_, T, din) * jax.nn.silu(z)
+    # grouped RMSNorm before out-projection (mamba2's norm placement)
+    from repro.lm.modules import rms_norm
+
+    y = rms_norm(y, lp["ssm_norm"], cfg.norm_eps)
+    out = y @ lp["out_proj"].astype(h.dtype)
+    new_cache = {"conv": new_conv, "ssm": new_state} if cache is not None else None
+    return out, new_cache

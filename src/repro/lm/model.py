@@ -1,0 +1,413 @@
+"""Composable decoder stack covering all 10 assigned architectures.
+
+Layers are grouped into a repeating *block pattern* (length P = lcm of the
+attention-interleave and MoE-interleave periods); parameters are stacked
+[n_rep, ...] per pattern position and the stack is executed as ONE lax.scan
+over repetitions — compile size is O(P) layer bodies regardless of depth
+(qwen2-72b's 80 layers lower as a single scanned body).
+
+Execution modes:
+  * train/prefill  — full-sequence forward (prefill also returns caches)
+  * decode         — one token against caches (attn KV / SWA ring / SSM state)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lm.attention import attention, decode_attention
+from repro.lm.config import LMConfig
+from repro.lm.mamba2 import mamba_mixer, ssd_decode_step
+from repro.lm.modules import apply_rope, init_dense, rms_norm
+from repro.lm.moe import moe_ffn
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------- pattern
+def block_pattern(cfg: LMConfig) -> List[Tuple[str, str]]:
+    """[(mixer, ffn)] for one repeating block."""
+    kinds = cfg.layer_kinds()
+    moe_every = 1 if (cfg.is_moe and not cfg.is_hybrid) else (2 if cfg.is_moe else 0)
+    period = 1
+    if cfg.is_hybrid:
+        period = np.lcm(cfg.attn_every, moe_every or 1)
+    elif cfg.is_ssm_only:
+        period = 1
+    pattern = []
+    for i in range(int(period)):
+        mixer = kinds[i] if i < len(kinds) else kinds[-1]
+        if moe_every and (i % moe_every == moe_every - 1 if moe_every > 1 else True):
+            ffn = "moe"
+        elif cfg.d_ff > 0:
+            ffn = "dense"
+        else:
+            ffn = "none"
+        pattern.append((mixer, ffn))
+    return pattern
+
+
+def n_repeats(cfg: LMConfig) -> int:
+    p = len(block_pattern(cfg))
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return cfg.n_layers // p
+
+
+# ----------------------------------------------------------------------- init
+def _init_attn_layer(key, cfg: LMConfig, cross: bool = False) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    prefix = "x" if cross else ""
+    p = {
+        f"{prefix}wq": init_dense(ks[0], (d, h * hd)),
+        f"{prefix}wk": init_dense(ks[1], (d, kv * hd)),
+        f"{prefix}wv": init_dense(ks[2], (d, kv * hd)),
+        f"{prefix}wo": init_dense(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias and not cross:
+        p[f"{prefix}bq"] = jnp.zeros((h * hd,))
+        p[f"{prefix}bk"] = jnp.zeros((kv * hd,))
+        p[f"{prefix}bv"] = jnp.zeros((kv * hd,))
+    if cfg.qk_norm and not cross:
+        p["qnorm"] = jnp.ones((hd,))
+        p["knorm"] = jnp.ones((hd,))
+    return p
+
+
+def _init_ffn(key, cfg: LMConfig, kind: str) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    if kind == "moe":
+        e = cfg.n_experts
+        return {
+            "router": init_dense(ks[0], (d, e)),
+            "moe_gate": init_dense(ks[1], (e, d, f)),
+            "moe_up": init_dense(ks[2], (e, d, f)),
+            "moe_down": init_dense(ks[3], (e, f, d)),
+        }
+    if kind == "dense":
+        if cfg.learned_pos:  # whisper-style gelu MLP with bias
+            return {
+                "w_up": init_dense(ks[0], (d, f)),
+                "b_up": jnp.zeros((f,)),
+                "w_down": init_dense(ks[1], (f, d)),
+                "b_down": jnp.zeros((d,)),
+            }
+        return {
+            "w_gate": init_dense(ks[0], (d, f)),
+            "w_up": init_dense(ks[1], (d, f)),
+            "w_down": init_dense(ks[2], (f, d)),
+        }
+    return {}
+
+
+def _init_ssm_layer(key, cfg: LMConfig) -> Dict:
+    d = cfg.d_model
+    din, g, n, nh = cfg.d_inner, 1, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * g * n
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * din + 2 * g * n + nh)),
+        "conv_w": init_dense(ks[1], (cfg.ssm_conv, conv_dim), in_axis=0),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "dt_bias": jnp.zeros((nh,)),
+        "A_log": jnp.zeros((nh,)),
+        "D_skip": jnp.ones((nh,)),
+        "ssm_norm": jnp.ones((din,)),
+        "out_proj": init_dense(ks[2], (din, d)),
+    }
+
+
+def _init_layer(key, cfg: LMConfig, mixer: str, ffn: str, cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict = {"ln1": jnp.ones((cfg.d_model,))}
+    if mixer == "attn":
+        p.update(_init_attn_layer(ks[0], cfg))
+    else:
+        p.update(_init_ssm_layer(ks[0], cfg))
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,))
+        p.update(_init_attn_layer(ks[1], cfg, cross=True))
+    if ffn != "none":
+        p["ln2"] = jnp.ones((cfg.d_model,))
+        p.update(_init_ffn(ks[2], cfg, ffn))
+    return p
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict:
+    """Full parameter pytree (fp32 masters; compute casts to bf16)."""
+    vp = cfg.padded_vocab()
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": init_dense(ks[0], (vp, d), in_axis=-1) * 0.02 * np.sqrt(d),
+        "final_norm": jnp.ones((d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(ks[1], (d, vp))
+    if cfg.learned_pos:
+        params["pos_embed"] = init_dense(ks[2], (cfg.learned_pos, d), in_axis=-1) * 0.02
+
+    pattern = block_pattern(cfg)
+    reps = n_repeats(cfg)
+    blocks = {}
+    for pi, (mixer, ffn) in enumerate(pattern):
+        cross = cfg.is_encdec and mixer == "attn"
+        lk = jax.random.fold_in(ks[3], pi)
+        stacked = [
+            _init_layer(jax.random.fold_in(lk, r), cfg, mixer, ffn, cross)
+            for r in range(reps)
+        ]
+        blocks[f"pos{pi}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+    params["blocks"] = blocks
+
+    if cfg.is_encdec:
+        enc_layers = [
+            _init_layer(jax.random.fold_in(ks[4], i), cfg, "attn", "dense")
+            for i in range(cfg.encoder_layers)
+        ]
+        params["enc"] = {
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers),
+            "pos_embed": init_dense(ks[5], (cfg.encoder_seq, d), in_axis=-1) * 0.02,
+            "final_norm": jnp.ones((d,)),
+        }
+    return params
+
+
+def abstract_params(cfg: LMConfig):
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# -------------------------------------------------------------------- forward
+def _attn_block(x, lp, cfg: LMConfig, positions, kv_in=None,
+                cache=None, cache_len=None, cross=False, causal=True,
+                pad_cache_to=None):
+    """Self- or cross-attention sublayer (pre-norm, residual outside).
+
+    Returns (out, cache_updates) where cache_updates is a dict of entries to
+    merge into this layer's cache (or None when cache is None)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    pre = "x" if cross else ""
+    q = x @ lp[f"{pre}wq"].astype(x.dtype)
+    if f"{pre}bq" in lp:
+        q = q + lp[f"{pre}bq"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+
+    updates = None
+    if cross:
+        if cache is not None and "xk" in cache:
+            k, v = cache["xk"], cache["xv"]  # precomputed encoder KV
+        else:
+            k = (kv_in @ lp[f"{pre}wk"].astype(x.dtype)).reshape(b, -1, kv, hd)
+            v = (kv_in @ lp[f"{pre}wv"].astype(x.dtype)).reshape(b, -1, kv, hd)
+            if cache is not None:  # prefill: persist encoder KV
+                updates = {"xk": k, "xv": v}
+        out = attention(q, k, v, causal=False,
+                        mode="dense_chunked" if cfg.exact_cost_mode else "auto")
+        return out.reshape(b, s, h * hd) @ lp[f"{pre}wo"].astype(x.dtype), updates
+
+    k = x @ lp["wk"].astype(x.dtype)
+    v = x @ lp["wv"].astype(x.dtype)
+    if "bk" in lp:
+        k = k + lp["bk"].astype(x.dtype)
+        v = v + lp["bv"].astype(x.dtype)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, lp["knorm"], cfg.norm_eps)
+    if not cfg.learned_pos:  # RoPE archs (absolute positions; ring-safe)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None and s == 1:  # decode: write KV at ring/linear slot
+        s_cache = cache["k"].shape[1]
+        pos = cache_len % s_cache if cfg.sliding_window else cache_len
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, 1)
+        eff = cache_len + 1
+        if cfg.sliding_window:
+            eff = jnp.minimum(eff, s_cache)  # ring bounds the window
+        lens = jnp.broadcast_to(eff, (b,)).astype(jnp.int32)
+        out = decode_attention(q, ck, cv, lens)
+        return (
+            out.reshape(b, s, h * hd) @ lp["wo"].astype(x.dtype),
+            {"k": ck, "v": cv},
+        )
+
+    if cache is not None:  # prefill: computed KV becomes the cache
+        if cfg.sliding_window and k.shape[1] > cfg.sliding_window:
+            updates = {"k": k[:, -cfg.sliding_window :], "v": v[:, -cfg.sliding_window :]}
+        else:
+            ck, cv = k, v
+            if pad_cache_to and pad_cache_to > s:  # capacity for future decodes
+                pad = ((0, 0), (0, pad_cache_to - s), (0, 0), (0, 0))
+                ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+            updates = {"k": ck, "v": cv}
+    out = attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                    mode="dense_chunked" if cfg.exact_cost_mode else "auto")
+    return out.reshape(b, s, h * hd) @ lp["wo"].astype(x.dtype), updates
+
+
+def _ffn_block(x, lp, cfg: LMConfig, kind: str, mesh, dp_axes):
+    if kind == "moe":
+        return moe_ffn(x, lp["router"].astype(x.dtype),
+                       lp["moe_gate"].astype(x.dtype),
+                       lp["moe_up"].astype(x.dtype),
+                       lp["moe_down"].astype(x.dtype), cfg, mesh, dp_axes)
+    if "w_gate" in lp:
+        return (jax.nn.silu(x @ lp["w_gate"].astype(x.dtype))
+                * (x @ lp["w_up"].astype(x.dtype))) @ lp["w_down"].astype(x.dtype)
+    return (jax.nn.gelu(x @ lp["w_up"].astype(x.dtype) + lp["b_up"].astype(x.dtype))
+            @ lp["w_down"].astype(x.dtype) + lp["b_down"].astype(x.dtype))
+
+
+def _layer(x, lp, cfg, mixer, ffn, positions, mesh, dp_axes, enc_out=None,
+           cache=None, cache_len=None, causal=True, pad_cache_to=None):
+    cache_out = dict(cache) if cache is not None else None
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        out, upd = _attn_block(h, lp, cfg, positions, cache=cache,
+                               cache_len=cache_len, causal=causal,
+                               pad_cache_to=pad_cache_to)
+    else:
+        out, upd = mamba_mixer(h, lp, cfg, cache=cache)
+    if upd:
+        cache_out.update(upd)
+    x = x + out
+    if mixer == "attn" and "xwq" in lp:  # whisper cross-attention sublayer
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        out, upd = _attn_block(h, lp, cfg, positions, kv_in=enc_out,
+                               cache=cache, cross=True)
+        if upd:
+            cache_out.update(upd)
+        x = x + out
+    if ffn != "none":
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + _ffn_block(h, lp, cfg, ffn, mesh, dp_axes)
+    return x, cache_out
+
+
+def encode_frames(params, cfg: LMConfig, frames: jnp.ndarray, mesh=None,
+                  dp_axes=()) -> jnp.ndarray:
+    """Whisper encoder over stub conv-frontend embeddings [B, Senc, D]."""
+    x = (frames + params["enc"]["pos_embed"][None, : frames.shape[1]]).astype(COMPUTE_DTYPE)
+    positions = jnp.arange(frames.shape[1])[None, :]
+
+    def body(carry, lp):
+        y, _ = _layer(carry, lp, cfg, "attn", "dense", positions, mesh, dp_axes,
+                      causal=False)
+        return y, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"]["layers"],
+                        unroll=cfg.exact_cost_mode)
+    return rms_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: LMConfig, tokens=None, embeddings=None,
+            enc_frames=None, mesh=None, dp_axes=(), caches=None,
+            cache_len=None, positions=None, pad_cache_to=None):
+    """Returns (hidden [B,S,D] after final norm, new_caches or None).
+
+    ``caches``: None (train) | "init" (prefill: build caches) | pytree with
+    leaves stacked [n_rep, ...] (decode: consume + produce caches)."""
+    if embeddings is not None:
+        x = embeddings.astype(COMPUTE_DTYPE)
+        b, s = x.shape[0], x.shape[1]
+    else:
+        x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+        b, s = tokens.shape
+    if positions is None:
+        base = 0 if cache_len is None else cache_len
+        positions = base + jnp.arange(s)[None, :]
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][positions].astype(COMPUTE_DTYPE)
+
+    enc_out = None
+    if cfg.is_encdec and enc_frames is not None:
+        enc_out = encode_frames(params, cfg, enc_frames, mesh, dp_axes)
+
+    pattern = block_pattern(cfg)
+    build = isinstance(caches, str) and caches == "init"
+    has_caches = (caches is not None) and not build
+
+    def _constrain(x):
+        if not (cfg.seq_shard and mesh is not None and x.ndim == 3):
+            return x
+        if "model" in (dp_axes or ()):  # fsdp profile: no TP axis to seq-shard
+            return x
+        if x.shape[1] % mesh.shape.get("model", 1) != 0:
+            return x
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        dp = dp_axes if dp_axes else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, "model", None)))
+
+    def block_body(carry, xs):
+        x = carry
+        bp = xs[0]
+        bc = xs[1] if has_caches else None
+        new_c = {}
+        for pi, (mixer, ffn) in enumerate(pattern):
+            if has_caches:
+                c_in = bc[f"pos{pi}"]
+            elif build:
+                c_in = {}
+            else:
+                c_in = None
+            x, c_out = _layer(x, bp[f"pos{pi}"], cfg, mixer, ffn, positions,
+                              mesh, dp_axes, enc_out=enc_out, cache=c_in,
+                              cache_len=cache_len, pad_cache_to=pad_cache_to)
+            if c_out is not None:
+                new_c[f"pos{pi}"] = c_out
+        return _constrain(x), (new_c if (has_caches or build) else None)
+
+    body_fn = jax.checkpoint(block_body) if (cfg.remat and caches is None) else block_body
+    xs = (params["blocks"], caches) if has_caches else (params["blocks"],)
+    x, new_caches = jax.lax.scan(body_fn, x, xs, unroll=cfg.exact_cost_mode)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches
+
+
+def logits_fn(params, cfg: LMConfig, hidden: jnp.ndarray) -> jnp.ndarray:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = hidden @ w.astype(hidden.dtype)
+    vp = cfg.padded_vocab()
+    if vp != cfg.vocab_size:  # mask padded vocab columns
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def chunked_ce_loss(params, cfg: LMConfig, hidden, labels, chunk: int = 512):
+    """Cross-entropy without materializing [B, S, V]: scan over S-chunks."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(COMPUTE_DTYPE)
+    vmask = (jnp.arange(cfg.padded_vocab()) < cfg.vocab_size).astype(jnp.float32)
+
+    def body(acc, i):
+        hc = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = (hc @ w).astype(jnp.float32) + (vmask - 1.0) * 1e30
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n),
+                            unroll=cfg.exact_cost_mode)
+    return total / (b * s)

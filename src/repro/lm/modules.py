@@ -1,0 +1,43 @@
+"""Shared neural building blocks (pure JAX; no flax in this environment)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, hd]; positions [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def gelu_mlp(x: jnp.ndarray, w_up, b_up, w_down, b_down) -> jnp.ndarray:
+    return jax.nn.gelu(x @ w_up + b_up) @ w_down + b_down
+
+
+def init_dense(key, shape, in_axis: int = -2):
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)

@@ -1,0 +1,79 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input_specs.
+
+Every (arch × shape) cell is fully described here; the dry-run lowers
+train_step / prefill_step / decode_step from these specs without allocating
+a single real buffer (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.lm.config import LMConfig
+from repro.lm.model import COMPUTE_DTYPE
+from repro.lm.steps import cache_struct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_supported(cfg: LMConfig, shape: str) -> Optional[str]:
+    """None if runnable; else a human-readable skip reason."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 524k decode requires sub-quadratic "
+                "attention (see DESIGN.md shape/skip notes)")
+    return None
+
+
+def input_specs(cfg: LMConfig, shape: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if cell.kind == "train":
+        batch: Dict = {"labels": sds((b, s), i32)}
+        if cfg.frontend == "vision":
+            # anyres patch+text embeddings are precomputed by the stub frontend
+            batch["embeddings"] = sds((b, s, cfg.d_model), COMPUTE_DTYPE)
+        else:
+            batch["tokens"] = sds((b, s), i32)
+        if cfg.is_encdec:
+            batch["encoder_frames"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                                          COMPUTE_DTYPE)
+        return {"batch": batch}
+
+    if cell.kind == "prefill":
+        batch = {}
+        if cfg.frontend == "vision":
+            batch["embeddings"] = sds((b, s, cfg.d_model), COMPUTE_DTYPE)
+        else:
+            batch["tokens"] = sds((b, s), i32)
+        if cfg.is_encdec:
+            batch["encoder_frames"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                                          COMPUTE_DTYPE)
+        return {"batch": batch}
+
+    # decode: one new token against an s-long cache
+    return {
+        "caches": cache_struct(cfg, b, s, abstract=True),
+        "tokens": sds((b, 1), i32),
+        "cache_len": sds((), i32),
+    }

@@ -1,0 +1,107 @@
+"""Jit-able step functions: train (fwd+bwd+Adam), prefill, decode."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lm.config import LMConfig
+from repro.lm.model import (
+    COMPUTE_DTYPE,
+    abstract_params,
+    block_pattern,
+    chunked_ce_loss,
+    forward,
+    init_params,
+    logits_fn,
+    n_repeats,
+)
+from repro.training.optim import AdamConfig, adam_init, adam_update
+
+LM_ADAM = AdamConfig(lr=1e-4, frozen=())
+
+
+def _forward_kwargs(cfg: LMConfig, batch: Dict) -> Dict:
+    kw = {}
+    if "embeddings" in batch:
+        kw["embeddings"] = batch["embeddings"]
+    else:
+        kw["tokens"] = batch["tokens"]
+    if cfg.is_encdec:
+        kw["enc_frames"] = batch["encoder_frames"]
+    return kw
+
+
+def make_train_step(cfg: LMConfig, mesh=None, dp_axes=(), adam: AdamConfig = LM_ADAM):
+    def loss_fn(params, batch):
+        hidden, _ = forward(params, cfg, mesh=mesh, dp_axes=dp_axes,
+                            **_forward_kwargs(cfg, batch))
+        return chunked_ce_loss(params, cfg, hidden, batch["labels"])
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adam_update(grads, opt_state, params, adam)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig, mesh=None, dp_axes=(),
+                      cache_margin: int = 0):
+    """``cache_margin`` extra KV slots are reserved so subsequent decode
+    steps have room (a decode write at cache_len==capacity would clamp)."""
+
+    def prefill_step(params, batch):
+        tokens = batch.get("tokens", batch.get("embeddings"))
+        pad_to = tokens.shape[1] + cache_margin if cache_margin else None
+        hidden, caches = forward(params, cfg, mesh=mesh, dp_axes=dp_axes,
+                                 caches="init", pad_cache_to=pad_to,
+                                 **_forward_kwargs(cfg, batch))
+        logits = logits_fn(params, cfg, hidden[:, -1:])
+        return caches, logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: LMConfig, mesh=None, dp_axes=()):
+    def decode_step(params, caches, tokens, cache_len):
+        hidden, new_caches = forward(params, cfg, tokens=tokens, mesh=mesh,
+                                     dp_axes=dp_axes, caches=caches,
+                                     cache_len=cache_len)
+        return logits_fn(params, cfg, hidden), new_caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------- cache spec
+def cache_struct(cfg: LMConfig, batch: int, s_cache: int, abstract: bool = True):
+    """Cache pytree (ShapeDtypeStructs or zeros) matching forward()'s layout:
+    {posN: {...}} with every leaf stacked [n_rep, ...]."""
+    reps = n_repeats(cfg)
+    hd = cfg.resolved_head_dim
+    kv = cfg.n_kv_heads
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
+        lambda s, d: jnp.zeros(s, d))
+    out = {}
+    s_attn = min(s_cache, cfg.sliding_window) if cfg.sliding_window else s_cache
+    for pi, (mixer, _) in enumerate(block_pattern(cfg)):
+        if mixer == "attn":
+            c = {
+                "k": mk((reps, batch, s_attn, kv, hd), COMPUTE_DTYPE),
+                "v": mk((reps, batch, s_attn, kv, hd), COMPUTE_DTYPE),
+            }
+            if cfg.is_encdec:
+                c["xk"] = mk((reps, batch, cfg.encoder_seq, kv, hd), COMPUTE_DTYPE)
+                c["xv"] = mk((reps, batch, cfg.encoder_seq, kv, hd), COMPUTE_DTYPE)
+        else:
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            c = {
+                "conv": mk((reps, batch, cfg.ssm_conv - 1, conv_dim), COMPUTE_DTYPE),
+                "ssm": mk((reps, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32),
+            }
+        out[f"pos{pi}"] = c
+    return out

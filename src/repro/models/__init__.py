@@ -1,0 +1,3 @@
+from repro.models.base import ModelConfig, QueryEncoder, make_model, model_names
+
+__all__ = ["ModelConfig", "QueryEncoder", "make_model", "model_names"]

@@ -1,0 +1,201 @@
+"""Unified operator interface for query-encoder backbones.
+
+Every model exposes the five pooled operators over a FLAT state vector
+[n, state_dim] so the executor is model-agnostic — the pooled kernels are
+exactly the Kernel_{tau}(X_batch; theta_tau) of Eq. 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    dim: int = 400                 # latent dimension (Table 5)
+    gamma: float = 12.0            # margin (Table 5)
+    n_particles: int = 2           # Q2P
+    hidden_mult: int = 2           # operator MLP width multiplier
+    semantic_dim: int = 0          # d_l of the PTE manifold; 0 = structural-only
+    semantic_proj_dim: int = 64    # F: R^{d_l} -> R^{proj} before concat (Eq. 12)
+    dtype: str = "float32"
+    # Pad entity-table rows to a multiple of this so the tables divide the
+    # mesh's model axis (§Perf: unpadded ogbl-wikikg2 has 2,500,604 entities —
+    # indivisible by 16 — and the sharding rules silently replicate 14GB of
+    # tables onto every device). Padded rows are masked out of score_all.
+    entity_pad: int = 1
+    # Route the hot-spot ops through the Pallas TPU kernels (repro/kernels):
+    # the Eq. 6 scoring matmul (models that expose ``pallas_score_mode``) and
+    # the cardinality-class attention intersection (BetaE). On CPU hosts the
+    # kernels run in interpret mode — bit-equivalent, Python-speed.
+    use_pallas: bool = False
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def mlp_params(key, sizes, prefix):
+    ks = jax.random.split(key, len(sizes) - 1)
+    p = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        p[f"{prefix}_w{i}"] = glorot(ks[i], (a, b))
+        p[f"{prefix}_b{i}"] = jnp.zeros((b,))
+    return p
+
+
+def mlp_apply(p, prefix, x, n_layers, act=jax.nn.relu, final_act=None):
+    for i in range(n_layers):
+        x = x @ p[f"{prefix}_w{i}"] + p[f"{prefix}_b{i}"]
+        if i < n_layers - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+class QueryEncoder:
+    """Base class. Subclasses implement the geometry; the fused-entity path
+    (structural ⊕ semantic, Eq. 12) is shared here."""
+
+    name: str = "base"
+    # "dot" | "l1" when the geometry's distance is expressible by the Pallas
+    # scoring kernel (score = gamma ± <q, e>); None = jnp path only.
+    pallas_score_mode = None
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # --- geometry interface -------------------------------------------------
+    @property
+    def state_dim(self) -> int:
+        raise NotImplementedError
+
+    def init_geometry(self, key, n_entities: int, n_relations: int) -> Dict:
+        raise NotImplementedError
+
+    def entity_state(self, params, ent_vec: jnp.ndarray) -> jnp.ndarray:
+        """Lift a fused entity vector [n, dim] into operator state [n, sd]."""
+        raise NotImplementedError
+
+    def project(self, params, x, rel_ids) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def intersect(self, params, X) -> jnp.ndarray:  # [n, k, sd] -> [n, sd]
+        raise NotImplementedError
+
+    def union(self, params, X) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def negate(self, params, x) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def distance(self, params, q, ent_vec) -> jnp.ndarray:
+        """d(q, e): q [.., sd] vs fused entity vec [.., dim] -> [..]."""
+        raise NotImplementedError
+
+    # --- shared fused-entity path (Eq. 11 + 12) ------------------------------
+    def padded_entities(self, n_entities: int) -> int:
+        m = self.cfg.entity_pad
+        return ((n_entities + m - 1) // m) * m
+
+    def init_params(self, key, n_entities: int, n_relations: int,
+                    semantic_table: Optional[jnp.ndarray] = None) -> Dict:
+        k1, k2, k3 = jax.random.split(key, 3)
+        d = self.cfg.dim
+        self.n_entities = n_entities  # real count; tables may be padded
+        rows = self.padded_entities(n_entities)
+        p = {"entity": jax.random.normal(k1, (rows, d)) * (1.0 / np.sqrt(d))}
+        p.update(self.init_geometry(k2, n_entities, n_relations))
+        if self.cfg.semantic_dim > 0:
+            assert semantic_table is not None and semantic_table.shape[1] == self.cfg.semantic_dim
+            st = jnp.asarray(semantic_table)
+            if st.shape[0] < rows:
+                st = jnp.pad(st, ((0, rows - st.shape[0]), (0, 0)))
+            p["sem_table"] = st  # frozen H_sem buffer
+            dp = self.cfg.semantic_proj_dim
+            p["sem_proj_w"] = glorot(k3, (self.cfg.semantic_dim, dp))
+            p["sem_proj_b"] = jnp.zeros((dp,))
+            kf = jax.random.fold_in(k3, 1)
+            p["fuse_w"] = glorot(kf, (d + dp, d))
+            p["fuse_b"] = jnp.zeros((d,))
+        return p
+
+    def frozen_param_names(self):
+        """Params excluded from gradients (the GPU-resident H_sem buffer)."""
+        return ("sem_table",)
+
+    def fused_entity_vec(self, params, ent_ids) -> jnp.ndarray:
+        """x_i = sigma(W_p [h_str ⊕ F(h_sem)] + b_p) — Eq. 12. Pure gathers +
+        one small matmul; the PTE itself never appears in the train loop."""
+        h = params["entity"][ent_ids]
+        if self.cfg.semantic_dim == 0:
+            return h
+        z = params["sem_table"][ent_ids]                      # Gather(H_sem, I) — Eq. 11
+        z = z @ params["sem_proj_w"] + params["sem_proj_b"]   # F: d_l -> dp
+        x = jnp.concatenate([h, z], axis=-1)
+        return jax.nn.sigmoid(x @ params["fuse_w"] + params["fuse_b"]) * 2.0 - 1.0
+
+    def embed(self, params, ent_ids) -> jnp.ndarray:
+        return self.entity_state(params, self.fused_entity_vec(params, ent_ids))
+
+    # --- scoring -------------------------------------------------------------
+    def score_ids(self, params, q, ent_ids) -> jnp.ndarray:
+        """gamma - d(q, e) for given candidate ids. q [B, sd], ids [B, M]."""
+        ev = self.fused_entity_vec(params, ent_ids)           # [B, M, dim]
+        return self.cfg.gamma - self.distance(params, q[:, None, :], ev)
+
+    def score_all(self, params, q) -> jnp.ndarray:
+        """Logits against EVERY entity (vectorized logit formulation, Eq. 6).
+        Padded table rows are masked to -inf."""
+        rows = params["entity"].shape[0]
+        ids = jnp.arange(rows)
+        ev = self.fused_entity_vec(params, ids)               # [E, dim]
+        if self.cfg.use_pallas and self.pallas_score_mode:
+            from repro.kernels import ops as kops
+
+            scores = kops.scoring(q, ev, gamma=self.cfg.gamma,
+                                  mode=self.pallas_score_mode)
+        else:
+            scores = self.cfg.gamma - self.distance(
+                params, q[:, None, :], ev[None, :, :])
+        n_real = getattr(self, "n_entities", rows)
+        if n_real != rows:
+            scores = jnp.where(ids[None, :] < n_real, scores, -1e30)
+        return scores
+
+
+_REGISTRY: Dict[str, Callable[[ModelConfig], QueryEncoder]] = {}
+
+
+def register_model(name: str):
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def _load_builtin():
+    import repro.models.betae  # noqa: F401
+    import repro.models.complex_e  # noqa: F401
+    import repro.models.fuzzqe  # noqa: F401
+    import repro.models.gqe  # noqa: F401
+    import repro.models.q2b  # noqa: F401
+    import repro.models.q2p  # noqa: F401
+
+
+def make_model(name: str, cfg: Optional[ModelConfig] = None) -> QueryEncoder:
+    _load_builtin()
+    return _REGISTRY[name](cfg or ModelConfig())
+
+
+def model_names():
+    _load_builtin()
+    return sorted(_REGISTRY)

@@ -1,0 +1,83 @@
+"""BetaE (Ren & Leskovec, 2020): Beta-distribution embeddings with closed-form
+negation (reciprocal parameters) and attention-weighted intersection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import betaln, digamma
+
+from repro.models.base import ModelConfig, QueryEncoder, mlp_apply, mlp_params, register_model
+
+_EPS = 0.05
+_MAXP = 40.0
+
+
+def _clip(p):
+    return jnp.clip(p, _EPS, _MAXP)
+
+
+@register_model("betae")
+class BetaE(QueryEncoder):
+    @property
+    def state_dim(self) -> int:
+        return 2 * self.cfg.dim
+
+    def init_geometry(self, key, n_entities, n_relations):
+        d, h = self.cfg.dim, self.cfg.dim * self.cfg.hidden_mult
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"relation": jax.random.normal(k1, (n_relations, d)) * (1.0 / jnp.sqrt(d))}
+        p.update(mlp_params(k2, (3 * d, h, 2 * d), "proj"))   # Psi_theta projection MLP
+        p.update(mlp_params(k3, (2 * d, h, 1), "att"))        # intersection attention
+        p.update(mlp_params(k4, (2 * d, h, 1), "uatt"))       # union mixture attention
+        return p
+
+    def _split(self, s):
+        d = self.cfg.dim
+        return s[..., :d], s[..., d:]
+
+    def entity_state(self, params, ent_vec):
+        # Sufficient statistics from the joint embedding (Eq. 3): the fused
+        # vector parameterizes (alpha, beta) via a smooth positive map.
+        a = _clip(jax.nn.softplus(ent_vec * 2.0) + _EPS)
+        b = _clip(jax.nn.softplus(-ent_vec * 2.0) + _EPS)
+        return jnp.concatenate([a, b], axis=-1)
+
+    def project(self, params, x, rel_ids):
+        r = params["relation"][rel_ids]
+        y = mlp_apply(params, "proj", jnp.concatenate([x, r], axis=-1), 2)
+        return _clip(jax.nn.softplus(y) + _EPS)
+
+    def _attn_combine(self, params, X, prefix):
+        if self.cfg.use_pallas:
+            # cardinality-class fused kernel (one VMEM pass per class, Eq. 8/9)
+            from repro.kernels import ops as kops
+
+            return _clip(kops.intersect(
+                X, params[f"{prefix}_w0"], params[f"{prefix}_b0"],
+                params[f"{prefix}_w1"], params[f"{prefix}_b1"]))
+        w = jax.nn.softmax(mlp_apply(params, prefix, X, 2), axis=1)  # [n, k, 1]
+        return _clip(jnp.sum(w * X, axis=1))
+
+    def intersect(self, params, X):
+        return self._attn_combine(params, X, "att")
+
+    def union(self, params, X):
+        # Mixture surrogate (native BetaE rewrites unions to DNF).
+        return self._attn_combine(params, X, "uatt")
+
+    def negate(self, params, x):
+        return _clip(1.0 / jnp.maximum(x, _EPS))
+
+    def distance(self, params, q, ent_vec):
+        ae, be = self._split(self.entity_state(params, ent_vec))
+        aq, bq = self._split(q)
+        aq, bq = _clip(aq), _clip(bq)
+        # KL( Beta(ae,be) || Beta(aq,bq) ), summed over dims.
+        kl = (
+            betaln(aq, bq)
+            - betaln(ae, be)
+            + (ae - aq) * digamma(ae)
+            + (be - bq) * digamma(be)
+            + (aq - ae + bq - be) * digamma(ae + be)
+        )
+        return jnp.sum(kl, axis=-1) / jnp.sqrt(self.cfg.dim)

@@ -1,0 +1,53 @@
+"""ComplEx (Trouillon et al., 2016) as a QueryEncoder — used by the Table 2
+single-hop (KG completion) runtime benchmark, matching the paper's choice of
+ComplEx/d=100 on Freebase. Projection is the complex Hadamard rotation; the
+set operators are simple elementwise surrogates (ComplEx is a 1p model; the
+surrogates just keep every pattern runnable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, QueryEncoder, register_model
+
+
+@register_model("complex")
+class ComplExE(QueryEncoder):
+    pallas_score_mode = "dot"  # Re<q, conj(e)> == plain dot in this layout
+
+    @property
+    def state_dim(self) -> int:
+        return self.cfg.dim  # dim/2 real + dim/2 imaginary
+
+    def init_geometry(self, key, n_entities, n_relations):
+        return {
+            "relation": jax.random.normal(key, (n_relations, self.cfg.dim))
+            * (1.0 / jnp.sqrt(self.cfg.dim))
+        }
+
+    def _split(self, s):
+        d = self.cfg.dim // 2
+        return s[..., :d], s[..., d:]
+
+    def entity_state(self, params, ent_vec):
+        return ent_vec
+
+    def project(self, params, x, rel_ids):
+        xr, xi = self._split(x)
+        rr, ri = self._split(params["relation"][rel_ids])
+        return jnp.concatenate([xr * rr - xi * ri, xr * ri + xi * rr], axis=-1)
+
+    def intersect(self, params, X):
+        return jnp.min(X, axis=1)
+
+    def union(self, params, X):
+        return jnp.max(X, axis=1)
+
+    def negate(self, params, x):
+        return -x
+
+    def distance(self, params, q, ent_vec):
+        qr, qi = self._split(q)
+        er, ei = self._split(ent_vec)
+        score = jnp.sum(qr * er + qi * ei, axis=-1)  # Re<q, conj(e)>
+        return -score

@@ -1,0 +1,55 @@
+"""FuzzQE (Chen et al., 2022): fuzzy-logic query embeddings. States live in
+[0,1]^d; intersection/union/negation are product t-norm / probabilistic sum /
+complement — exactly the closed fuzzy-logic operators."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, QueryEncoder, mlp_apply, mlp_params, register_model
+
+_EPS = 1e-6
+
+
+@register_model("fuzzqe")
+class FuzzQE(QueryEncoder):
+    @property
+    def state_dim(self) -> int:
+        return self.cfg.dim
+
+    def init_geometry(self, key, n_entities, n_relations):
+        d, h = self.cfg.dim, self.cfg.dim * self.cfg.hidden_mult
+        k1, k2 = jax.random.split(key)
+        p = {"relation": jax.random.normal(k1, (n_relations, d)) * (1.0 / jnp.sqrt(d))}
+        p.update(mlp_params(k2, (2 * d, h, d), "proj"))
+        return p
+
+    def entity_state(self, params, ent_vec):
+        return jax.nn.sigmoid(ent_vec * 3.0)
+
+    def _logit(self, x):
+        x = jnp.clip(x, _EPS, 1.0 - _EPS)
+        return jnp.log(x) - jnp.log1p(-x)
+
+    def project(self, params, x, rel_ids):
+        r = params["relation"][rel_ids]
+        y = mlp_apply(params, "proj", jnp.concatenate([self._logit(x), r], axis=-1), 2)
+        return jax.nn.sigmoid(y)
+
+    def intersect(self, params, X):
+        # Product t-norm, numerically as exp(sum log).
+        return jnp.exp(jnp.sum(jnp.log(jnp.clip(X, _EPS, 1.0)), axis=1))
+
+    def union(self, params, X):
+        # Probabilistic sum: 1 - prod(1 - x).
+        return 1.0 - jnp.exp(jnp.sum(jnp.log(jnp.clip(1.0 - X, _EPS, 1.0)), axis=1))
+
+    def negate(self, params, x):
+        return 1.0 - x
+
+    def distance(self, params, q, ent_vec):
+        e = self.entity_state(params, ent_vec)
+        sim = jnp.sum(q * e, axis=-1) / (
+            jnp.linalg.norm(q, axis=-1) * jnp.linalg.norm(e, axis=-1) + _EPS
+        )
+        return (1.0 - sim) * jnp.sqrt(self.cfg.dim)

@@ -1,0 +1,45 @@
+"""GQE (Hamilton et al., 2018): translational projection + DeepSets intersection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, QueryEncoder, glorot, mlp_apply, mlp_params, register_model
+
+
+@register_model("gqe")
+class GQE(QueryEncoder):
+    pallas_score_mode = "l1"  # score = gamma - |q - e|_1 == scoring kernel l1
+
+    @property
+    def state_dim(self) -> int:
+        return self.cfg.dim
+
+    def init_geometry(self, key, n_entities, n_relations):
+        d, h = self.cfg.dim, self.cfg.dim * self.cfg.hidden_mult
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"relation": jax.random.normal(k1, (n_relations, d)) * (1.0 / jnp.sqrt(d))}
+        p.update(mlp_params(k2, (d, h, d), "int"))          # DeepSets phi
+        p["int_out_w"] = glorot(k3, (d, d))                 # DeepSets rho
+        p.update(mlp_params(k4, (d, h, d), "neg"))          # negation extension
+        return p
+
+    def entity_state(self, params, ent_vec):
+        return ent_vec
+
+    def project(self, params, x, rel_ids):
+        return x + params["relation"][rel_ids]
+
+    def intersect(self, params, X):
+        h = mlp_apply(params, "int", X, 2)                  # [n, k, d]
+        return jnp.mean(h, axis=1) @ params["int_out_w"]
+
+    def union(self, params, X):
+        # Smooth elementwise max — a permutation-invariant union surrogate.
+        return jax.nn.logsumexp(X * 4.0, axis=1) / 4.0
+
+    def negate(self, params, x):
+        return mlp_apply(params, "neg", x, 2)
+
+    def distance(self, params, q, ent_vec):
+        return jnp.sum(jnp.abs(q - ent_vec), axis=-1)

@@ -1,0 +1,69 @@
+"""Query2Box (Ren et al., 2020): box embeddings (center ⊕ offset)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, QueryEncoder, glorot, mlp_apply, mlp_params, register_model
+
+
+@register_model("q2b")
+class Q2B(QueryEncoder):
+    ALPHA = 0.02  # inside-distance downweight (paper default)
+
+    @property
+    def state_dim(self) -> int:
+        return 2 * self.cfg.dim
+
+    def init_geometry(self, key, n_entities, n_relations):
+        d, h = self.cfg.dim, self.cfg.dim * self.cfg.hidden_mult
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        p = {
+            "rel_center": jax.random.normal(k1, (n_relations, d)) * (1.0 / jnp.sqrt(d)),
+            "rel_offset": jax.random.normal(k2, (n_relations, d)) * 0.1,
+        }
+        p.update(mlp_params(k3, (2 * d, h, d), "att"))   # center attention scorer
+        p.update(mlp_params(k4, (2 * d, h, d), "off"))   # offset DeepSets
+        p.update(mlp_params(k5, (2 * d, h, 2 * d), "neg"))
+        return p
+
+    def _split(self, s):
+        d = self.cfg.dim
+        return s[..., :d], s[..., d:]
+
+    def _join(self, c, o):
+        return jnp.concatenate([c, o], axis=-1)
+
+    def entity_state(self, params, ent_vec):
+        return self._join(ent_vec, jnp.zeros_like(ent_vec))
+
+    def project(self, params, x, rel_ids):
+        c, o = self._split(x)
+        c = c + params["rel_center"][rel_ids]
+        o = o + jax.nn.softplus(params["rel_offset"][rel_ids])
+        return self._join(c, o)
+
+    def intersect(self, params, X):
+        C, O = self._split(X)                                   # [n, k, d]
+        att = jax.nn.softmax(mlp_apply(params, "att", X, 2), axis=1)
+        c = jnp.sum(att * C, axis=1)
+        deep = jax.nn.sigmoid(jnp.mean(mlp_apply(params, "off", X, 2), axis=1))
+        o = jnp.min(O, axis=1) * deep                           # shrink
+        return self._join(c, o)
+
+    def union(self, params, X):
+        # Enclosing-box surrogate (native Q2B rewrites unions to DNF).
+        C, O = self._split(X)
+        c = jnp.mean(C, axis=1)
+        o = jnp.max(jnp.abs(C - c[:, None, :]) + O, axis=1)
+        return self._join(c, o)
+
+    def negate(self, params, x):
+        return mlp_apply(params, "neg", x, 2)
+
+    def distance(self, params, q, ent_vec):
+        c, o = self._split(q)
+        delta = jnp.abs(ent_vec - c)
+        d_out = jnp.sum(jnp.maximum(delta - o, 0.0), axis=-1)
+        d_in = jnp.sum(jnp.minimum(delta, o), axis=-1)
+        return d_out + self.ALPHA * d_in

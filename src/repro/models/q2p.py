@@ -1,0 +1,72 @@
+"""Query2Particles (Bai et al., 2022): multi-particle query states with
+attention-based particle selection for the set operators."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, QueryEncoder, glorot, mlp_apply, mlp_params, register_model
+
+
+@register_model("q2p")
+class Q2P(QueryEncoder):
+    @property
+    def np_(self) -> int:
+        return self.cfg.n_particles
+
+    @property
+    def state_dim(self) -> int:
+        return self.np_ * self.cfg.dim
+
+    def init_geometry(self, key, n_entities, n_relations):
+        d, h = self.cfg.dim, self.cfg.dim * self.cfg.hidden_mult
+        k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+        p = {
+            "relation": jax.random.normal(k1, (n_relations, d)) * (1.0 / jnp.sqrt(d)),
+            "particle_offsets": jax.random.normal(k2, (self.np_, d)) * 0.1,
+            "int_queries": jax.random.normal(k5, (self.np_, d)) * (1.0 / jnp.sqrt(d)),
+            "uni_queries": jax.random.normal(k6, (self.np_, d)) * (1.0 / jnp.sqrt(d)),
+        }
+        p.update(mlp_params(k3, (2 * d, h, d), "proj"))
+        p.update(mlp_params(k4, (d, h, d), "neg"))
+        return p
+
+    def _particles(self, s):
+        return s.reshape(s.shape[:-1] + (self.np_, self.cfg.dim))
+
+    def _flat(self, P):
+        return P.reshape(P.shape[:-2] + (self.state_dim,))
+
+    def entity_state(self, params, ent_vec):
+        P = ent_vec[..., None, :] + params["particle_offsets"]
+        return self._flat(P)
+
+    def project(self, params, x, rel_ids):
+        P = self._particles(x)                                   # [n, p, d]
+        r = params["relation"][rel_ids][..., None, :]
+        Y = mlp_apply(params, "proj", jnp.concatenate([P, jnp.broadcast_to(r, P.shape)], -1), 2)
+        return self._flat(P + Y)                                 # residual move
+
+    def _select(self, params, X, queries):
+        # X: [n, k, sd] -> all particles [n, k*p, d]; attend with np learned
+        # queries to re-select a fixed-size particle set.
+        n, k, _ = X.shape
+        allP = self._particles(X).reshape(n, k * self.np_, self.cfg.dim)
+        logits = jnp.einsum("pd,nmd->npm", queries, allP) / jnp.sqrt(self.cfg.dim)
+        att = jax.nn.softmax(logits, axis=-1)
+        return self._flat(jnp.einsum("npm,nmd->npd", att, allP))
+
+    def intersect(self, params, X):
+        return self._select(params, X, params["int_queries"])
+
+    def union(self, params, X):
+        return self._select(params, X, params["uni_queries"])
+
+    def negate(self, params, x):
+        P = self._particles(x)
+        return self._flat(mlp_apply(params, "neg", P, 2))
+
+    def distance(self, params, q, ent_vec):
+        P = self._particles(q)                                    # [.., p, d]
+        sims = jnp.einsum("...pd,...d->...p", P, ent_vec)
+        return -jnp.max(sims, axis=-1) / jnp.sqrt(self.cfg.dim)

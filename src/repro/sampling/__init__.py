@@ -1,0 +1,9 @@
+from repro.sampling.adaptive import AdaptiveDistribution, pattern_losses_from_batch
+from repro.sampling.online import OnlineSampler, SampledQuery
+
+__all__ = [
+    "OnlineSampler",
+    "SampledQuery",
+    "AdaptiveDistribution",
+    "pattern_losses_from_batch",
+]

@@ -1,0 +1,3 @@
+from repro.semantic.pte import PTEConfig, StubPTE, precompute_semantic_table
+
+__all__ = ["PTEConfig", "StubPTE", "precompute_semantic_table"]

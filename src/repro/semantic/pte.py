@@ -1,0 +1,143 @@
+"""Pre-trained Text Encoder (PTE) substrate — §4.4.
+
+The container is offline, so Qwen3-Embedding / BGE are stood in by a small
+deterministic transformer encoder over synthetic "descriptions" (token
+sequences derived from an entity's id and graph neighborhood). The system
+treats H_sem as an opaque [E, d_l] buffer either way, so every systems claim
+(decoupled offline encode, unload, GPU-resident gather) is exercised for real;
+only the linguistic content is synthetic.
+
+To make the semantic prior *useful* (the paper's +MRR effect), descriptions
+mention neighbor entities, so entities that co-occur in the graph get nearby
+embeddings — the same reason real textual priors help on sparse KGs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.kg import KnowledgeGraph
+
+_DESC_LEN = 16
+_VOCAB = 4096
+
+
+@dataclasses.dataclass
+class PTEConfig:
+    name: str = "stub-qwen3-embedding-0.6b"
+    d_l: int = 1024        # Qwen3-Embedding-0.6B output dim
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    seed: int = 1234
+
+
+class StubPTE:
+    """Frozen stub encoder with a real (small) transformer forward pass, so
+    joint-training benchmarks pay a genuine per-batch inference cost."""
+
+    def __init__(self, cfg: PTEConfig = PTEConfig()):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        d, h = cfg.d_model, cfg.d_model * 4
+        ks = jax.random.split(key, 4 + 4 * cfg.n_layers)
+        s = 1.0 / np.sqrt(d)
+        self.params = {
+            "tok": jax.random.normal(ks[0], (_VOCAB, d)) * s,
+            "pos": jax.random.normal(ks[1], (_DESC_LEN, d)) * s,
+            "out_w": jax.random.normal(ks[2], (d, cfg.d_l)) * s,
+            "out_b": jnp.zeros((cfg.d_l,)),
+        }
+        for i in range(cfg.n_layers):
+            k0, k1, k2, k3 = ks[4 + 4 * i : 8 + 4 * i]
+            self.params[f"l{i}_qkv"] = jax.random.normal(k0, (d, 3 * d)) * s
+            self.params[f"l{i}_o"] = jax.random.normal(k1, (d, d)) * s
+            self.params[f"l{i}_up"] = jax.random.normal(k2, (d, h)) * s
+            self.params[f"l{i}_down"] = jax.random.normal(k3, (h, d)) * s
+        self.unloaded = False
+
+    # -- synthetic descriptions ------------------------------------------------
+    @staticmethod
+    def descriptions(kg: KnowledgeGraph, ent_ids: np.ndarray) -> np.ndarray:
+        """Token sequence per entity: hashed id tokens + first neighbors."""
+        indptr, rels, tails = kg.relations_by_head
+        toks = np.zeros((len(ent_ids), _DESC_LEN), dtype=np.int32)
+        for i, e in enumerate(np.asarray(ent_ids)):
+            e = int(e)
+            row = [e % _VOCAB, (e * 2654435761) % _VOCAB]
+            lo, hi = indptr[e], indptr[e + 1]
+            for j in range(lo, min(hi, lo + (_DESC_LEN - 2) // 2)):
+                row.append(int(rels[j]) % _VOCAB)
+                row.append(int(tails[j]) % _VOCAB)
+            toks[i, : len(row)] = row[:_DESC_LEN]
+        return toks
+
+    # -- forward ---------------------------------------------------------------
+    def encode_tokens(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        if self.unloaded:
+            raise RuntimeError("PTE has been unloaded (decoupled phase ended)")
+        p = self.params
+        x = p["tok"][tokens] + p["pos"][None, :, :]
+        d = self.cfg.d_model
+        nh = self.cfg.n_heads
+        hd = d // nh
+        for i in range(self.cfg.n_layers):
+            qkv = x @ p[f"l{i}_qkv"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+
+            def heads(t):
+                return t.reshape(t.shape[0], t.shape[1], nh, hd).transpose(0, 2, 1, 3)
+
+            q, k, v = heads(q), heads(k), heads(v)
+            att = jax.nn.softmax(jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd), axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(x.shape)
+            x = x + o @ p[f"l{i}_o"]
+            x = x + jax.nn.gelu(x @ p[f"l{i}_up"]) @ p[f"l{i}_down"]
+        pooled = x.mean(axis=1)
+        return pooled @ p["out_w"] + p["out_b"]
+
+    def encode_entities(self, kg: KnowledgeGraph, ent_ids: np.ndarray) -> jnp.ndarray:
+        return self.encode_tokens(jnp.asarray(self.descriptions(kg, ent_ids)))
+
+    def unload(self) -> None:
+        """§4.4: 'once H_sem is generated, the PTE is unloaded from memory'."""
+        self.params = None
+        self.unloaded = True
+
+
+def precompute_semantic_table(
+    kg: KnowledgeGraph,
+    pte: Optional[StubPTE] = None,
+    batch_size: int = 256,
+    unload: bool = True,
+    smooth: float = 0.5,
+) -> np.ndarray:
+    """Offline pre-computation phase (Eq. 10): encode every entity, L2
+    normalize, then one hop of neighbor smoothing (stands in for the semantic
+    relatedness real descriptions carry). Returns host numpy; callers register
+    it as a device-resident buffer."""
+    pte = pte or StubPTE()
+    enc = jax.jit(pte.encode_tokens)
+    out = []
+    ids = np.arange(kg.n_entities)
+    for lo in range(0, kg.n_entities, batch_size):
+        chunk = ids[lo : lo + batch_size]
+        out.append(np.asarray(enc(jnp.asarray(StubPTE.descriptions(kg, chunk)))))
+    table = np.concatenate(out, axis=0)
+    table /= np.linalg.norm(table, axis=1, keepdims=True) + 1e-6
+    if smooth > 0:
+        nb = np.zeros_like(table)
+        cnt = np.ones((kg.n_entities, 1))
+        np.add.at(nb, kg.triples[:, 0], table[kg.triples[:, 2]])
+        np.add.at(cnt, kg.triples[:, 0], 1.0)
+        np.add.at(nb, kg.triples[:, 2], table[kg.triples[:, 0]])
+        np.add.at(cnt, kg.triples[:, 2], 1.0)
+        table = table + smooth * nb / cnt
+        table /= np.linalg.norm(table, axis=1, keepdims=True) + 1e-6
+    if unload:
+        pte.unload()
+    return table.astype(np.float32)

@@ -1,0 +1,20 @@
+from repro.training.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.training.eval import evaluate, filtered_ranks
+from repro.training.loop import NGDBTrainer, TrainConfig
+from repro.training.loss import negative_sampling_loss
+from repro.training.optim import AdamConfig, adam_init, adam_update, global_norm
+
+__all__ = [
+    "NGDBTrainer",
+    "TrainConfig",
+    "AdamConfig",
+    "adam_init",
+    "adam_update",
+    "global_norm",
+    "negative_sampling_loss",
+    "evaluate",
+    "filtered_ranks",
+    "CheckpointManager",
+    "save_checkpoint",
+    "load_checkpoint",
+]

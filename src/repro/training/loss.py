@@ -1,0 +1,19 @@
+"""Vectorized objective (Eq. 6): negative-sampling log-sigmoid ranking loss.
+
+Scores are gamma - d(q, e); positives and K negatives are scored as one dense
+[B, 1+K] block (the "vectorized logit formulation") rather than per-sample
+lookups. Also exposes the per-query loss vector for adaptive sampling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def negative_sampling_loss(model, params, q_states, pos_ids, neg_ids):
+    """q_states [B, sd], pos_ids [B], neg_ids [B, K] -> (mean loss, per-query)."""
+    cand = jnp.concatenate([pos_ids[:, None], neg_ids], axis=1)   # [B, 1+K]
+    scores = model.score_ids(params, q_states, cand)              # one fused block
+    pos = scores[:, 0]
+    neg = scores[:, 1:]
+    per_query = -jax.nn.log_sigmoid(pos) - jnp.mean(jax.nn.log_sigmoid(-neg), axis=1)
+    return jnp.mean(per_query), per_query

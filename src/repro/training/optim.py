@@ -1,0 +1,89 @@
+"""Adam optimizer in pure JAX (no optax in this environment), with frozen-
+parameter masking (the GPU-resident H_sem buffer must receive no gradients)
+and global-norm clipping."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-4           # Table 5
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 0.0     # 0 = off
+    frozen: Tuple[str, ...] = ("sem_table",)
+
+
+def _is_frozen(path: Tuple, frozen: Tuple[str, ...]) -> bool:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    return any(str(n) in frozen for n in names)
+
+
+def adam_init(params, cfg: AdamConfig = AdamConfig()):
+    """Frozen buffers (e.g. the H_sem table) get token-sized moment slots:
+    they receive no updates, so real m/v would be pure HBM waste (§Perf
+    iteration N2 — 2x the H_sem bytes on every device)."""
+
+    def zeros(path, p):
+        if _is_frozen(path, cfg.frozen):
+            return jnp.zeros((1,), p.dtype)
+        return jnp.zeros_like(p)
+
+    return {
+        "m": jax.tree_util.tree_map_with_path(zeros, params),
+        "v": jax.tree_util.tree_map_with_path(zeros, params),
+        "step": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in leaves))
+
+
+def adam_update(grads, state, params, cfg: AdamConfig = AdamConfig()):
+    step = state["step"] + 1
+    if cfg.clip_norm > 0:
+        g_norm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (g_norm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        if _is_frozen(path, cfg.frozen):
+            return p, m, v
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1t
+        vhat = v / b2t
+        new_p = p - cfg.lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+        return new_p, m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    gs = jax.tree.leaves(grads)
+    ms = jax.tree.leaves(state["m"])
+    vs = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat, gs, ms, vs):
+        a, b, c = upd(path, p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        {
+            "m": jax.tree_util.tree_unflatten(treedef, new_m),
+            "v": jax.tree_util.tree_unflatten(treedef, new_v),
+            "step": step,
+        },
+    )

@@ -1,0 +1,30 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 placeholder devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_kg():
+    from repro.data import generate_synthetic_kg
+
+    return generate_synthetic_kg(200, 10, 2400, seed=0)
+
+
+@pytest.fixture(scope="session")
+def mixed_queries(tiny_kg):
+    """Mixed-pattern query batch with guaranteed-nonempty answers."""
+    from repro.sampling import OnlineSampler
+
+    sampler = OnlineSampler(tiny_kg, seed=0)
+    return sampler.sample_batch(28)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

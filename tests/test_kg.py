@@ -1,0 +1,62 @@
+import numpy as np
+import pytest
+
+from repro.data import KnowledgeGraph, generate_synthetic_kg, split_kg, TABLE4
+
+
+def test_dedup_and_sorted():
+    tri = np.array([[0, 0, 1], [0, 0, 1], [1, 0, 2], [0, 1, 2]])
+    kg = KnowledgeGraph(3, 2, tri)
+    assert len(kg) == 3
+
+
+def test_neighbors():
+    tri = np.array([[0, 0, 1], [0, 0, 2], [0, 1, 2], [1, 0, 0]])
+    kg = KnowledgeGraph(3, 2, tri)
+    assert set(kg.neighbors(0, 0).tolist()) == {1, 2}
+    assert set(kg.neighbors(0, 1).tolist()) == {2}
+    assert kg.neighbors(2, 0).size == 0
+
+
+def test_neighbors_of_set():
+    tri = np.array([[0, 0, 1], [1, 0, 2], [2, 0, 0]])
+    kg = KnowledgeGraph(3, 1, tri)
+    out = kg.neighbors_of_set(np.array([0, 1]), 0)
+    assert set(out.tolist()) == {1, 2}
+
+
+def test_incoming_csr():
+    tri = np.array([[0, 0, 2], [1, 1, 2], [2, 0, 1]])
+    kg = KnowledgeGraph(3, 2, tri)
+    indptr, rels, heads = kg.incoming_by_tail
+    lo, hi = indptr[2], indptr[3]
+    assert sorted(heads[lo:hi].tolist()) == [0, 1]
+
+
+def test_generator_deterministic():
+    a = generate_synthetic_kg(100, 5, 500, seed=7)
+    b = generate_synthetic_kg(100, 5, 500, seed=7)
+    assert np.array_equal(a.triples, b.triples)
+    assert len(a) == 500
+
+
+def test_generator_power_law(tiny_kg):
+    deg = tiny_kg.degree
+    # hubby: top decile should hold well over its proportional share
+    top = np.sort(deg)[-len(deg) // 10 :].sum()
+    assert top > 0.3 * deg.sum()
+
+
+def test_split_disjoint():
+    kg = generate_synthetic_kg(100, 5, 1000, seed=1)
+    train, valid, test = split_kg(kg, 0.1, 0.1, seed=0)
+    assert len(train) + len(valid) + len(test) == len(kg)
+    tr = {tuple(t) for t in train.triples.tolist()}
+    for t in valid.tolist() + test.tolist():
+        assert tuple(t) not in tr
+
+
+def test_table4_statistics():
+    assert TABLE4["ogbl-wikikg2"].n_entities == 2_500_604
+    assert TABLE4["ATLAS-Wiki-Triple-4M"].n_relations == 512_064
+    assert TABLE4["FB15k"].n_total == 592_213

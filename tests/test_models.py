@@ -1,0 +1,106 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, make_model, model_names
+
+
+@pytest.fixture(scope="module")
+def setup():
+    out = {}
+    for name in model_names():
+        model = make_model(name, ModelConfig(dim=8))
+        params = model.init_params(jax.random.PRNGKey(0), 50, 6)
+        out[name] = (model, params)
+    return out
+
+
+@pytest.mark.parametrize("name", model_names())
+def test_operator_shapes(name, setup):
+    model, params = setup[name]
+    ids = jnp.array([0, 1, 2])
+    x = model.embed(params, ids)
+    assert x.shape == (3, model.state_dim)
+    y = model.project(params, x, jnp.array([0, 1, 2]))
+    assert y.shape == x.shape
+    for k in (2, 3):
+        stack = jnp.stack([x] * k, axis=1)
+        assert model.intersect(params, stack).shape == x.shape
+        assert model.union(params, stack).shape == x.shape
+    assert model.negate(params, x).shape == x.shape
+    s = model.score_ids(params, x, jnp.array([[0, 1], [2, 3], [4, 5]]))
+    assert s.shape == (3, 2)
+    assert np.isfinite(np.asarray(s)).all()
+
+
+@pytest.mark.parametrize("name", model_names())
+def test_score_all_matches_score_ids(name, setup):
+    model, params = setup[name]
+    q = model.embed(params, jnp.array([4, 7]))
+    full = np.asarray(model.score_all(params, q))
+    ids = jnp.arange(50)[None, :].repeat(2, 0)
+    sub = np.asarray(model.score_ids(params, q, ids))
+    np.testing.assert_allclose(full, sub, rtol=1e-4, atol=1e-5)
+
+
+def test_betae_negation_involution(setup):
+    model, params = setup["betae"]
+    x = model.embed(params, jnp.array([1, 2, 3]))
+    xx = model.negate(params, model.negate(params, x))
+    np.testing.assert_allclose(np.asarray(xx), np.asarray(x), rtol=1e-4)
+
+
+def test_betae_positive_params(setup):
+    model, params = setup["betae"]
+    x = model.embed(params, jnp.arange(10))
+    assert (np.asarray(x) > 0).all()
+    y = model.project(params, x, jnp.zeros(10, jnp.int32))
+    assert (np.asarray(y) > 0).all()
+
+
+def test_fuzzqe_logic_laws(setup):
+    model, params = setup["fuzzqe"]
+    x = model.embed(params, jnp.array([1, 2]))
+    # complement involution
+    np.testing.assert_allclose(
+        np.asarray(model.negate(params, model.negate(params, x))),
+        np.asarray(x), rtol=1e-5)
+    # De Morgan: ¬(a ∧ b) == ¬a ∨ ¬b for product/probabilistic-sum pair
+    a = model.embed(params, jnp.array([3]))
+    b = model.embed(params, jnp.array([4]))
+    lhs = model.negate(params, model.intersect(params, jnp.stack([a, b], 1)))
+    rhs = model.union(params, jnp.stack([model.negate(params, a),
+                                         model.negate(params, b)], 1))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-5)
+    # intersection shrinks membership, union grows it
+    inter = model.intersect(params, jnp.stack([a, b], 1))
+    uni = model.union(params, jnp.stack([a, b], 1))
+    assert (np.asarray(inter) <= np.asarray(a) + 1e-6).all()
+    assert (np.asarray(uni) >= np.asarray(a) - 1e-6).all()
+
+
+def test_q2b_entity_in_own_box(setup):
+    model, params = setup["q2b"]
+    x = model.embed(params, jnp.array([5]))
+    ev = model.fused_entity_vec(params, jnp.array([5]))
+    d = model.distance(params, x, ev)
+    assert float(d[0]) < 1e-4  # zero offset box centered at the entity
+
+
+def test_semantic_fusion_path(tiny_kg):
+    from repro.semantic import precompute_semantic_table, StubPTE, PTEConfig
+
+    pte = StubPTE(PTEConfig(d_l=32, n_layers=1, d_model=32))
+    table = precompute_semantic_table(tiny_kg, pte, batch_size=64)
+    assert table.shape == (tiny_kg.n_entities, 32)
+    assert pte.unloaded
+    with pytest.raises(RuntimeError):
+        pte.encode_entities(tiny_kg, np.arange(3))
+
+    model = make_model("gqe", ModelConfig(dim=8, semantic_dim=32))
+    params = model.init_params(jax.random.PRNGKey(0), tiny_kg.n_entities,
+                               tiny_kg.n_relations, semantic_table=table)
+    v = model.fused_entity_vec(params, jnp.array([0, 1]))
+    assert v.shape == (2, 8)
+    assert np.isfinite(np.asarray(v)).all()

@@ -1,0 +1,115 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import PATTERN_NAMES, TEMPLATES, QueryInstance, build_batched_dag, schedule
+from repro.core.scheduler import bucket_size
+from repro.lm.moe import combine_from_experts, pack_by_expert
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True)
+hypothesis.settings.load_profile("ci")
+
+
+@given(st.integers(0, 4096), st.sampled_from([16, 64, 512]))
+def test_bucket_size_properties(n, b_max):
+    b = bucket_size(n, b_max)
+    assert b >= min(n, b_max)          # fits (after chunking at b_max)
+    assert b <= max(b_max, 1)
+    if 0 < n <= b_max:
+        assert b < 2 * n or b == 1     # at most 2x padding waste
+
+
+@st.composite
+def query_batches(draw):
+    pats = draw(st.lists(st.sampled_from(PATTERN_NAMES), min_size=1, max_size=24))
+    rng = np.random.default_rng(draw(st.integers(0, 1000)))
+    qs = []
+    for p in pats:
+        t = TEMPLATES[p]
+        qs.append(QueryInstance(p, rng.integers(0, 100, t.n_anchors),
+                                rng.integers(0, 10, t.n_relations)))
+    return qs
+
+
+@given(query_batches(), st.sampled_from([4, 16, 128]),
+       st.sampled_from(["max_fillness", "fifo"]))
+def test_schedule_invariants(queries, b_max, policy):
+    """Every node executes exactly once, deps-before-use, slots never clobbered
+    while live, answers reachable — for ANY pattern mixture and B_max."""
+    dag = build_batched_dag(queries)
+    sched = schedule(dag, b_max=b_max, policy=policy)
+    executed = np.zeros(dag.n_nodes, bool)
+    slot_holder = {}
+    for step in sched.steps:
+        assert step.n <= b_max
+        for bi, v in enumerate(step.node_ids):
+            assert not executed[v], "node scheduled twice"
+            for ci, j in enumerate(dag.inputs[v]):
+                assert executed[j]
+                assert slot_holder.get(step.in_slots[bi, ci]) == j
+        for bi, v in enumerate(step.node_ids):
+            executed[v] = True
+            slot_holder[step.out_slots[bi]] = v
+    assert executed.all()
+    for qi, a in enumerate(dag.answer_node):
+        assert slot_holder[sched.answer_slots[qi]] == a
+    # peak slots never exceeds node count; reuse never loses correctness
+    assert sched.n_slots <= dag.n_nodes
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(1, 4),
+       st.integers(0, 1000))
+def test_moe_pack_combine_conservation(t, e, k, seed):
+    """With ample capacity, pack+identity+combine reproduces gate-weighted x;
+    with any capacity, outputs of dropped tokens are exactly zero."""
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, 4)), jnp.float32)
+    eidx = jnp.asarray(rng.integers(0, e, (t, k)))
+    gates = jnp.asarray(rng.dirichlet(np.ones(k), size=t), jnp.float32)
+    cap_full = t * k
+    packed, meta = pack_by_expert(x, eidx, gates, e, cap_full)
+    y = combine_from_experts(packed, meta, t)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-4, atol=1e-5)
+
+    cap_small = max(1, t // 4)
+    packed2, meta2 = pack_by_expert(x, eidx, gates, e, cap_small)
+    y2 = combine_from_experts(packed2, meta2, t)
+    assert np.isfinite(np.asarray(y2)).all()
+    # each packed row is either zero or one of the original rows
+    pk = np.asarray(packed2).reshape(-1, 4)
+    xs = np.asarray(x)
+    for row in pk:
+        if np.abs(row).sum() > 0:
+            assert np.min(np.abs(xs - row).sum(axis=1)) < 1e-5
+
+
+@given(st.integers(0, 1000))
+def test_quantize_roundtrip_bound(seed):
+    from repro.training.compression import dequantize_int8, quantize_int8
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.1, 10), jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    assert err.max() <= float(scale) / 2 + 1e-6  # half-ulp rounding bound
+
+
+@given(query_batches())
+def test_answer_slots_survive_reuse(queries):
+    """Slot reuse must never hand an answer's slot to another node."""
+    dag = build_batched_dag(queries)
+    sched = schedule(dag, b_max=32, reuse_slots=True)
+    ans = set(sched.answer_slots.tolist())
+    owners = {}
+    for step in sched.steps:
+        for bi, v in enumerate(step.node_ids):
+            s = int(step.out_slots[bi])
+            owners.setdefault(s, []).append(v)
+    for qi, a in enumerate(dag.answer_node):
+        s = int(sched.answer_slots[qi])
+        assert owners[s][-1] == a  # the answer is the LAST writer of its slot
