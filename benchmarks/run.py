@@ -12,7 +12,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: tput,ops,sem,adaptive,"
-                         "freebase,scaling,kernels")
+                         "freebase,scaling,kernels,pipeline")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -28,6 +28,8 @@ def main() -> None:
         ("freebase", "Table 2: single-hop completion runtime", runtime_freebase.run),
         ("scaling", "Fig 7/Table 2: multi-device structural scaling", scaling.run),
         ("kernels", "Pallas kernel validation/micro", kernels_bench.run),
+        ("pipeline", "Pipelined dataflow executor vs sync + compile cache",
+         throughput.run_pipeline_compare),
     ]
     print("name,us_per_call,derived")
     for key, desc, fn in suites:

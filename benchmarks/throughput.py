@@ -11,13 +11,29 @@ signature-stable, then time pure training-step execution over the list.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/throughput.py`
+    _root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+    # Pin XLA-CPU to one intra-op thread: applies equally to both engines,
+    # leaves a core for the host pipeline, and cuts run-to-run variance on
+    # small shared machines. Must be set before jax initializes.
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1"
+    ).strip()
 
 import numpy as np
 
 from benchmarks.common import emit
 from repro.data import load_dataset
 from repro.models import ModelConfig, make_model
+from repro.sampling import OnlineSampler
 from repro.training import AdamConfig, NGDBTrainer, TrainConfig
 
 
@@ -51,6 +67,114 @@ def run(models=("betae", "q2b", "gqe"),
             emit(f"tput/{ds}/{name}/speedup", 0.0, f"x{speedup:.2f}")
 
 
+def _host_parallel_efficiency(seconds: float = 0.8) -> float:
+    """How much concurrent progress a Python thread and a GIL-releasing
+    compute thread make on this host, summed in units of their solo rates
+    (2.0 = two independent cores, 1.0 = a single effective core / no
+    overlap possible). The pipelined engine overlaps exactly these two kinds
+    of work, so its wall-clock win is physically bounded by this number —
+    emitted so the speedup below is interpretable on small/shared machines."""
+    import threading
+
+    a = np.random.default_rng(0).normal(size=(384, 384)).astype(np.float32)
+
+    def compute(count, stop):  # numpy matmul releases the GIL
+        while not stop[0]:
+            (a @ a).sum()
+            count[0] += 1
+
+    def python_work(count, stop):  # interpreter-bound, holds the GIL
+        x = 0
+        while not stop[0]:
+            x = (x + 1) % 1000003
+            count[0] += 1
+
+    def run(workers) -> List[float]:
+        counts = [[0] for _ in workers]
+        stop = [False]
+        ts = [threading.Thread(target=w, args=(c, stop))
+              for w, c in zip(workers, counts)]
+        for t in ts:
+            t.start()
+        time.sleep(seconds)
+        stop[0] = True
+        for t in ts:
+            t.join()
+        return [c[0] / seconds for c in counts]
+
+    comp_solo = run([compute])[0]
+    py_solo = run([python_work])[0]
+    comp_c, py_c = run([compute, python_work])
+    return comp_c / max(comp_solo, 1) + py_c / max(py_solo, 1)
+
+
+def run_pipeline_compare(steps: int = 20, batch: int = 1024, dim: int = 64,
+                         model_name: str = "gqe", negatives: int = 32,
+                         dataset: str = "FB15k", trials: int = 3) -> float:
+    """Sync vs pipelined dataflow execution on an identical end-to-end
+    synthetic workload — online sampling → training arrays → Algorithm-1
+    scheduling → fused device step (DESIGN.md §Pipeline).
+
+    The batch stream is a seeded sampler: every pass (and both engines) sees
+    the exact same batch sequence, so the signature set is fixed and the
+    compile cache must report ZERO retraces across all timed passes. Sync
+    runs all stages strictly in sequence on one thread (the ablation
+    baseline); pipelined overlaps the host stages with device execution.
+    Timed passes are interleaved (S,P,S,P,...) so machine-speed drift hits
+    both engines equally, and min-time per mode rejects co-tenant noise
+    spikes. Steady-state claims: ZERO retraces (asserted — 100% compile
+    cache hit rate), and pipelined >= 1.3x sync steps/sec wherever the host
+    can actually overlap (reported; physically bounded by the emitted
+    host_parallel_efficiency — see DESIGN.md §Pipeline)."""
+    eff = _host_parallel_efficiency()
+    emit(f"pipeline/{dataset}/{model_name}/host_parallel_efficiency", 0.0,
+         f"{eff:.2f} (2.0=two independent cores, 1.0=no overlap possible)")
+
+    kg, _, _ = load_dataset(dataset)
+    src = OnlineSampler(kg, seed=7)
+    replay = [src.sample_batch(batch) for _ in range(steps)]
+
+    def stream():
+        """Deterministic batch source: same sequence every pass."""
+        it = iter(replay * 1000)
+        return lambda: next(it)
+
+    trainers = {}
+    for mode in ("sync", "pipelined"):
+        model = make_model(model_name, ModelConfig(dim=dim, gamma=6.0))
+        cfg = TrainConfig(batch_size=batch, n_negatives=negatives, b_max=256,
+                          prefetch=2, executor="pooled",
+                          pipeline=(mode == "pipelined"),
+                          adam=AdamConfig(lr=1e-3), seed=0)
+        tr = NGDBTrainer(model, kg, cfg)
+        tr.train(steps, log_every=0, batches=stream())  # warm every signature
+        tr._train_fns.reset_counters()
+        trainers[mode] = tr
+
+    best = {"sync": float("inf"), "pipelined": float("inf")}
+    for _ in range(max(trials, 1)):
+        for mode, tr in trainers.items():
+            t0 = time.perf_counter()
+            tr.train(steps, log_every=0, batches=stream())  # steady-state
+            best[mode] = min(best[mode], time.perf_counter() - t0)
+
+    qps = {}
+    for mode, tr in trainers.items():
+        qps[mode] = steps * batch / best[mode]
+        cc = tr._train_fns.stats()
+        emit(f"pipeline/{dataset}/{model_name}/{mode}_steps_per_sec",
+             1e6 * best[mode] / steps,
+             f"steps/s={steps / best[mode]:.2f} qps={qps[mode]:.0f}")
+        emit(f"pipeline/{dataset}/{model_name}/{mode}_cache_hit_rate", 0.0,
+             f"{cc['hit_rate']:.2%} ({cc['misses']} retraces)")
+        assert cc["misses"] == 0, (
+            f"{mode}: {cc['misses']} retraces after warmup — the bucketed "
+            f"signature set must be compile-stable on a replayed workload")
+    speedup = qps["pipelined"] / qps["sync"]
+    emit(f"pipeline/{dataset}/{model_name}/speedup", 0.0, f"x{speedup:.2f}")
+    return speedup
+
+
 def run_schedule_stats(batch: int = 512) -> None:
     """Memory-side claim (Eq. 7): slot reuse vs query-scoped allocation, and
     the kernel-count claim (Eq. 4/5): pooled steps vs fragmented launches."""
@@ -81,5 +205,20 @@ def run_schedule_stats(batch: int = 512) -> None:
 
 
 if __name__ == "__main__":
-    run()
-    run_schedule_stats()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compare", action="store_true",
+                    help="sync vs pipelined dataflow executor + cache hit rate")
+    ap.add_argument("--steps", type=int, default=15)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--negatives", type=int, default=32)
+    ap.add_argument("--model", default="gqe")
+    ap.add_argument("--trials", type=int, default=3)
+    args = ap.parse_args()
+    if args.compare:
+        run_pipeline_compare(steps=args.steps, batch=args.batch, dim=args.dim,
+                             model_name=args.model, negatives=args.negatives,
+                             trials=args.trials)
+    else:
+        run()
+        run_schedule_stats()

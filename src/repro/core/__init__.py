@@ -1,4 +1,5 @@
 # The paper's primary contribution: operator-level batched training.
+from repro.core.compile_cache import CompileCache
 from repro.core.executor import PooledExecutor, PreparedBatch, QueryLevelExecutor
 from repro.core.ops import OpType
 from repro.core.patterns import (
@@ -28,4 +29,5 @@ __all__ = [
     "PooledExecutor",
     "QueryLevelExecutor",
     "PreparedBatch",
+    "CompileCache",
 ]

@@ -3,7 +3,9 @@
 The pooled executor traces the host-computed ``ExecutionSchedule`` into one
 jit program: every PoolStep is a gather → fused-operator-kernel → scatter on a
 slot-reused workspace tensor (DESIGN.md §3). Compiled programs are cached by
-schedule signature; pool sizes are bucketed so the signature set is small.
+schedule signature in an LRU ``CompileCache`` with hit/miss counters
+(DESIGN.md §Pipeline); pool sizes are bucketed so the signature set is small
+and — after warmup — every lookup hits, i.e. zero retraces in steady state.
 
 A key throughput trick: the schedule (and all slot index arrays) depend only
 on the *pattern multiset* of the batch, never on entity/relation ids. Batches
@@ -19,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compile_cache import CompileCache
 from repro.core.ops import OpType
 from repro.core.patterns import QueryInstance
 from repro.core.querydag import BatchedDAG, build_batched_dag
@@ -39,9 +42,15 @@ def _pad2(a: np.ndarray, n: int, fill: int) -> np.ndarray:
 
 @dataclasses.dataclass
 class PreparedBatch:
-    """Everything the jitted encoder needs for one batch."""
+    """Everything the jitted encoder needs for one batch.
+
+    ``signature`` keys compiled PROGRAMS (it only encodes bucketed shapes, so
+    distinct structures may share one program); ``structure_key`` keys the
+    exact schedule (pattern multiset), i.e. anything caching the schedule's
+    ARRAYS must use it, not the coarser signature."""
 
     signature: Tuple
+    structure_key: Tuple
     meta: Tuple[Tuple[int, int, int], ...]      # static (op, card, padded_n) per step
     slot_arrays: List[Dict[str, np.ndarray]]    # static per structure: in/out slots
     bind_arrays: List[Dict[str, np.ndarray]]    # per batch: anchor/rel ids
@@ -62,13 +71,18 @@ class PooledExecutor:
     """Operator-level batching engine (the paper's contribution 1)."""
 
     def __init__(self, model, b_max: int = 512, reuse_slots: bool = True,
-                 policy: str = "max_fillness"):
+                 policy: str = "max_fillness", cache_size: int = 128):
         self.model = model
         self.b_max = b_max
         self.reuse_slots = reuse_slots
         self.policy = policy
-        self._sched_cache: Dict[Tuple, Tuple[ExecutionSchedule, Tuple, List, int]] = {}
-        self._encode_cache: Dict[Tuple, callable] = {}
+        self._sched_cache = CompileCache(cache_size, name="schedule")
+        self._encode_cache = CompileCache(cache_size, name="encode")
+
+    def cache_stats(self) -> Dict[str, Dict[str, float]]:
+        """Hit/miss/eviction counters for both signature-keyed caches."""
+        return {"schedule": self._sched_cache.stats(),
+                "encode": self._encode_cache.stats()}
 
     # ------------------------------------------------------------------ prep
     def prepare(self, queries: Sequence[QueryInstance]) -> PreparedBatch:
@@ -91,7 +105,7 @@ class PooledExecutor:
                 for s in sched.steps
             ]
             cached = (sched, meta, slot_arrays, trash)
-            self._sched_cache[key] = cached
+            self._sched_cache.put(key, cached)
         sched, meta, slot_arrays, trash = cached
 
         bind_arrays = [
@@ -103,6 +117,7 @@ class PooledExecutor:
         ]
         return PreparedBatch(
             signature=sched.signature() + (self.model.name,),
+            structure_key=key,
             meta=meta,
             slot_arrays=slot_arrays,
             bind_arrays=bind_arrays,
@@ -144,7 +159,7 @@ class PooledExecutor:
                 ws = ws.at[arr["out_slots"]].set(y)
             return ws[answer_slots]
 
-        self._encode_cache[key] = encode
+        self._encode_cache.put(key, encode)
         return encode
 
     def encode(self, params, queries: Sequence[QueryInstance]) -> jnp.ndarray:

@@ -5,6 +5,17 @@ the next queries (CSR traversal + rejection sampling are pure numpy and
 release the GIL in the hot loops). This is the TPU analogue of the paper's
 CPU↔GPU pipeline: the host side overlaps with async-dispatched device steps.
 
+Two stages (DESIGN.md §Pipeline):
+
+* ``BatchPrefetcher`` — sampling workers producing raw query batches.
+* ``PreparedBatchPrefetcher`` — a background *scheduler thread* that consumes
+  raw batches and runs everything that used to sit on the training critical
+  path: negative sampling arrays, batch canonicalization, and Algorithm-1
+  scheduling (``PooledExecutor.prepare``). Its output queue holds fully
+  device-ready work items, so the main thread only dispatches jit calls while
+  XLA executes the previous step — scheduling for batch k+1 overlaps device
+  execution of batch k.
+
 Straggler mitigation: multiple producers feed one queue; a slow producer
 (e.g. pathological rejection sampling streak) cannot stall training because
 consumption order is whoever-finishes-first, and a watchdog re-issues work
@@ -12,10 +23,13 @@ items that exceed a deadline.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
+
+import numpy as np
 
 from repro.sampling.online import OnlineSampler, SampledQuery
 
@@ -102,3 +116,159 @@ class BatchPrefetcher:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+
+
+def prepare_work_item(sampler, executor, batch, n_negatives: int,
+                      dev_static=None) -> "PreparedWorkItem":
+    """Run the full host side of one training step: negative-sampling arrays,
+    canonicalization + Algorithm-1 scheduling, and device transfer.
+
+    ``dev_static`` (optional, a ``CompileCache``) caches device-resident
+    static slot arrays by STRUCTURE key — they never change between batches
+    with the same pattern multiset, so they transfer once instead of once
+    per step. The structure key is essential: the coarser program signature
+    only encodes bucketed shapes, and two different structures (e.g. 5 vs 6
+    queries padding to the same buckets) may share a signature while having
+    different slot/answer arrays."""
+    import jax.numpy as jnp  # deferred: keep module import light
+
+    queries, pos, neg = sampler.to_training_arrays(batch, n_negatives)
+    prepared = executor.prepare(queries)
+    static = (dev_static.get(prepared.structure_key)
+              if dev_static is not None else None)
+    if static is None:
+        static = (
+            [{k: jnp.asarray(v) for k, v in s.items()}
+             for s in prepared.slot_arrays],
+            jnp.asarray(prepared.answer_slots),
+        )
+        if dev_static is not None:
+            dev_static.put(prepared.structure_key, static)
+    slot_dev, ans = static
+    steps = [
+        {**s, **{k: jnp.asarray(v) for k, v in b.items()}}
+        for s, b in zip(slot_dev, prepared.bind_arrays)
+    ]
+    return PreparedWorkItem(
+        prepared=prepared,
+        steps=steps,
+        ans=ans,
+        pos=jnp.asarray(pos[prepared.order]),
+        neg=jnp.asarray(neg[prepared.order]),
+        patterns=prepared.patterns,
+        n_queries=len(queries),
+    )
+
+
+@dataclasses.dataclass
+class PreparedWorkItem:
+    """One fully host-scheduled training step, ready for device dispatch.
+
+    ``pos``/``neg`` are already permuted into the prepared batch's canonical
+    (pattern-sorted) order, and ``steps``/``ans``/``pos``/``neg`` are already
+    device arrays (transferred from the scheduler thread), so the consumer
+    never touches numpy on the critical path — it just dispatches the jitted
+    program."""
+
+    prepared: object            # repro.core.executor.PreparedBatch
+    steps: List[dict]           # device-resident slot/bind arrays per step
+    ans: object                 # device answer_slots
+    pos: object                 # [B] positives, canonical order (device)
+    neg: object                 # [B, K] negatives, canonical order (device)
+    patterns: List[str]         # canonical order, for adaptive sampling
+    n_queries: int
+
+
+class PreparedBatchPrefetcher:
+    """Background-thread prefetch queue feeding the Algorithm-1 scheduler.
+
+    A single scheduler thread pulls raw batches (from an internal
+    ``BatchPrefetcher``, or from ``batch_fn`` when the caller controls the
+    workload — e.g. benchmarks replaying a fixed batch list), builds the
+    training arrays, and runs ``executor.prepare`` so the schedule cache and
+    all bind arrays are ready before the trainer ever sees the item.
+
+    One scheduler thread by design — and deliberately few threads overall:
+    ``executor.prepare`` mutates the executor's signature-keyed caches (a
+    single consumer makes that race-free without locking the hot path), and
+    under the GIL only one Python thread makes progress at a time anyway, so
+    extra host threads just add handoff latency. When ``batch_fn`` is given
+    (deterministic batch source), it runs inside the scheduler thread;
+    otherwise an internal ``BatchPrefetcher`` supplies sampled batches.
+    """
+
+    def __init__(
+        self,
+        sampler: OnlineSampler,
+        executor,
+        batch_size: int,
+        n_negatives: int,
+        depth: int = 2,
+        workers: int = 2,
+        batch_fn: Optional[Callable[[], List[SampledQuery]]] = None,
+    ):
+        self.sampler = sampler
+        self.executor = executor
+        self.n_negatives = n_negatives
+        self._q: "queue.Queue[PreparedWorkItem]" = queue.Queue(maxsize=max(depth, 1))
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._batches: Optional[BatchPrefetcher] = None
+        if batch_fn is None:
+            self._batches = BatchPrefetcher(sampler, batch_size, depth=depth,
+                                            workers=workers)
+            self._next_batch = self._batches.next
+        else:
+            self._next_batch = batch_fn
+        # Device-resident static slot arrays, keyed by structure key. LRU so
+        # an unbounded signature stream (e.g. a pattern curriculum) cannot
+        # grow device memory without bound.
+        from repro.core.compile_cache import CompileCache
+
+        self._dev_static = CompileCache(128, name="dev_static")
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                batch = self._next_batch()
+                item = prepare_work_item(self.sampler, self.executor, batch,
+                                         self.n_negatives, self._dev_static)
+            except BaseException as e:  # surface on the consumer side
+                if self._error is None:
+                    self._error = e
+                self._stop.set()
+                return
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.25)
+                    break
+                except queue.Full:
+                    continue
+
+    def next(self, timeout: float = 120.0) -> PreparedWorkItem:
+        while True:
+            if self._error is not None:
+                raise RuntimeError("prepared-batch prefetcher failed") from self._error
+            try:
+                return self._q.get(timeout=0.25)
+            except queue.Empty:
+                timeout -= 0.25
+                if timeout <= 0:
+                    raise
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._batches is not None:
+            self._batches.close()
+        # Keep draining while joining: the scheduler thread may be blocked in
+        # a queue.put, and taking items is what wakes it immediately.
+        deadline = time.monotonic() + 5.0
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.02)

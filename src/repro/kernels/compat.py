@@ -1,0 +1,11 @@
+"""Version bridges for the ``jax.experimental.pallas.tpu`` API.
+
+Newer JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(mirroring the moe.py shard_map bridge); resolve whichever this JAX has so
+the kernels import on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _intersect_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, k: int):
     x = x_ref[...].astype(jnp.float32)                      # [bn, k, d]
@@ -73,5 +75,5 @@ def intersect_pallas(
         out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
     )(x, w1, b1.reshape(1, hd), w2, b2.reshape(1, pad))

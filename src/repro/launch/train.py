@@ -35,6 +35,12 @@ def main() -> None:
     ap.add_argument("--semantic-dim", type=int, default=256)
     ap.add_argument("--adaptive", action="store_true")
     ap.add_argument("--executor", default="pooled", choices=["pooled", "query_level"])
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined dataflow mode: overlap Algorithm-1 "
+                         "scheduling for batch k+1 with device execution of "
+                         "batch k (sync mode is the ablation baseline)")
+    ap.add_argument("--max-inflight", type=int, default=2,
+                    help="pipelined dispatch window (2 = double-buffered)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-queries", type=int, default=64)
     ap.add_argument("--log-every", type=int, default=20)
@@ -59,6 +65,7 @@ def main() -> None:
         batch_size=args.batch_size, n_negatives=args.negatives,
         adam=AdamConfig(lr=args.lr), adaptive=args.adaptive,
         executor=args.executor, checkpoint_dir=args.ckpt_dir,
+        pipeline=args.pipeline, max_inflight=args.max_inflight,
     )
     trainer = NGDBTrainer(model, kg, cfg, semantic_table=table)
     if trainer.resume():
@@ -68,7 +75,15 @@ def main() -> None:
     trainer.train(args.steps, log_every=args.log_every)
     dt = time.time() - t0
     qps = args.steps * args.batch_size / dt
-    print(f"trained {args.steps} steps in {dt:.1f}s ({qps:.0f} queries/sec)")
+    # pipeline mode requires the pooled executor; train() falls back to the
+    # sync loop otherwise — report what actually ran.
+    mode = "pipelined" if (args.pipeline and args.executor == "pooled") else "sync"
+    if args.pipeline and mode == "sync":
+        print("note: --pipeline requires --executor pooled; ran the sync path")
+    cc = trainer.compile_cache_stats()["train_step"]
+    print(f"trained {args.steps} steps [{mode}] in {dt:.1f}s ({qps:.0f} queries/sec)")
+    print(f"compile cache: {cc['size']} programs, "
+          f"hit rate {cc['hit_rate']:.2%} ({cc['misses']} traces)")
 
     eval_qs = [b.query for b in OnlineSampler(kg, seed=123).sample_batch(args.eval_queries)]
     metrics = evaluate(model, trainer.params, trainer.executor, full_kg,

@@ -1,16 +1,35 @@
 """End-to-end NGDB training loop: online sampling → operator-level scheduling
 → fused execution → vectorized loss → Adam, with adaptive sampling, prefetch
-pipelining and fault-tolerant checkpointing."""
+pipelining and fault-tolerant checkpointing.
+
+Two execution modes (DESIGN.md §Pipeline):
+
+* **sync** (``pipeline=False``, the ablation baseline): each step runs
+  sampling → Algorithm-1 scheduling → device step → blocking loss readback
+  strictly in sequence, so the host idles during device execution and the
+  device idles during host scheduling.
+* **pipelined** (``pipeline=True``): background threads run the host side —
+  sampling workers (or a deterministic batch pump) feeding one scheduler
+  thread that samples negatives, canonicalizes and runs Algorithm-1
+  scheduling for batch *k+1* while batch *k* executes on device. The main
+  thread dispatches jitted step programs (XLA executes with the GIL
+  released, so host stages continue underneath) and retires finished steps
+  from a bounded in-flight window (``max_inflight``, i.e. double-buffered
+  for the default of 2).
+"""
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compile_cache import CompileCache
 from repro.core.executor import PooledExecutor, PreparedBatch, QueryLevelExecutor
 from repro.core.patterns import TEMPLATES
 from repro.sampling.adaptive import AdaptiveDistribution, pattern_losses_from_batch
@@ -33,6 +52,10 @@ class TrainConfig:
     checkpoint_every: int = 200
     seed: int = 0
     prefetch: int = 2               # producer/consumer queue depth (0 = sync)
+    pipeline: bool = False          # overlap host scheduling w/ device steps
+    max_inflight: int = 2           # pipelined: bounded dispatch window
+    compile_cache_size: int = 128   # LRU capacity for jitted step programs
+    gil_switch_interval: float = 2e-3  # pipelined: bound GIL handoff latency
 
 
 class NGDBTrainer:
@@ -41,7 +64,8 @@ class NGDBTrainer:
         self.kg = kg
         self.cfg = cfg
         if cfg.executor == "pooled":
-            self.executor = PooledExecutor(model, b_max=cfg.b_max)
+            self.executor = PooledExecutor(model, b_max=cfg.b_max,
+                                           cache_size=cfg.compile_cache_size)
         else:
             self.executor = QueryLevelExecutor(model, b_max=cfg.b_max)
             self.executor.encode_fn = None  # query-level path handled eagerly
@@ -58,7 +82,7 @@ class NGDBTrainer:
             else None
         )
         self.step = 0
-        self._train_fns: Dict[Tuple, callable] = {}
+        self._train_fns = CompileCache(cfg.compile_cache_size, name="train_step")
         self.history: List[Dict] = []
 
     # ------------------------------------------------------------------ fns
@@ -80,8 +104,15 @@ class NGDBTrainer:
             return params, opt_state, loss, per_q
 
         fn = jax.jit(step_fn, donate_argnums=(0, 1))
-        self._train_fns[sig] = fn
+        self._train_fns.put(sig, fn)
         return fn
+
+    def compile_cache_stats(self) -> Dict[str, Dict[str, float]]:
+        """Counters for every signature-keyed cache in the engine."""
+        out = {"train_step": self._train_fns.stats()}
+        ex = self.executor if isinstance(self.executor, PooledExecutor) else self.executor._inner
+        out.update(ex.cache_stats())
+        return out
 
     # ----------------------------------------------------------------- steps
     def train_step(self, batch: Optional[List[SampledQuery]] = None) -> Dict[str, float]:
@@ -139,7 +170,7 @@ class NGDBTrainer:
             return loss, per_q, grads
 
         fn = jax.jit(gfn)
-        self._train_fns[sig] = fn
+        self._train_fns.put(sig, fn)
         return fn
 
     def _query_level_step(self, queries, pos, neg):
@@ -181,17 +212,32 @@ class NGDBTrainer:
         return total / n, np.array(per_q_all), patterns
 
     # ------------------------------------------------------------------ loop
-    def train(self, n_steps: int, log_every: int = 50, prefetcher=None) -> List[Dict]:
+    def train(self, n_steps: int, log_every: int = 50, prefetcher=None,
+              batches=None) -> List[Dict]:
+        """Run ``n_steps``. ``batches`` pins the workload — a fixed batch
+        list (cycled) or a zero-arg callable yielding batches (e.g. a seeded
+        sampler stream) — so benchmarks/tests can feed sync and pipelined
+        modes the SAME batches; otherwise batches come from the online
+        sampler."""
+        if self.cfg.pipeline and isinstance(self.executor, PooledExecutor):
+            return self._train_pipelined(n_steps, log_every, batches=batches)
+
         from repro.data.pipeline import BatchPrefetcher
 
         own = None
-        if prefetcher is None and self.cfg.prefetch > 0 and not self.adaptive:
+        if (prefetcher is None and batches is None and self.cfg.prefetch > 0
+                and not self.adaptive):
             own = prefetcher = BatchPrefetcher(
                 self.sampler, self.cfg.batch_size, depth=self.cfg.prefetch
             )
         try:
             for i in range(n_steps):
-                batch = prefetcher.next() if prefetcher else None
+                if callable(batches):
+                    batch = batches()
+                elif batches is not None:
+                    batch = batches[i % len(batches)]
+                else:
+                    batch = prefetcher.next() if prefetcher else None
                 rec = self.train_step(batch)
                 if log_every and (i + 1) % log_every == 0:
                     print(
@@ -201,6 +247,113 @@ class NGDBTrainer:
         finally:
             if own is not None:
                 own.close()
+        if self.ckpt:
+            self.ckpt.maybe_save(
+                self.step, {"params": self.params, "opt": self.opt_state}, force=True
+            )
+        return self.history
+
+    # ------------------------------------------------------------- pipelined
+    def _retire(self, pending, t_last: float, log_every: int) -> float:
+        """Block on one in-flight step's loss, fold its metrics into history.
+
+        ``pending`` carries a snapshot of the (params, opt_state) produced BY
+        the retired step when that step lands on a checkpoint boundary, so
+        the checkpoint is labeled with the step whose parameters it actually
+        contains — ``self.params`` may already belong to a later dispatched
+        step, and the retired step's own outputs are donated into the next
+        dispatch (hence the explicit copy at dispatch time)."""
+        loss, per_q, patterns, n_queries, snap = pending
+        loss = float(loss)  # sync point: waits for that device step only
+        now = time.perf_counter()
+        if self.adaptive:
+            self.adaptive.update(pattern_losses_from_batch(patterns, per_q))
+        self.step += 1
+        rec = {
+            "step": self.step,
+            "loss": loss,
+            "queries_per_sec": n_queries / max(now - t_last, 1e-9),
+        }
+        self.history.append(rec)
+        if log_every and self.step % log_every == 0:
+            print(f"step {rec['step']:6d} loss {rec['loss']:.4f} "
+                  f"q/s {rec['queries_per_sec']:.0f}")
+        if self.ckpt and snap is not None:
+            params, opt_state = snap
+            self.ckpt.maybe_save(
+                self.step,
+                {"params": params, "opt": opt_state},
+                metadata={"loss": loss},
+            )
+        return now
+
+    def _train_pipelined(self, n_steps: int, log_every: int,
+                         batches=None) -> List[Dict]:
+        """Dataflow mode (DESIGN.md §Pipeline).
+
+        Host stages run on background threads (sampling workers — or a batch
+        pump for a deterministic source — feeding one scheduler thread that
+        builds fully device-ready work items). The main thread dispatches
+        the jitted step program (XLA executes with the GIL released, so the
+        host stages keep running underneath) and retires finished steps from
+        a bounded in-flight window (``max_inflight``, default 2 = double
+        buffered): a step's loss is only read back once it leaves the
+        window, so metric readback never stalls dispatch."""
+        from repro.data.pipeline import PreparedBatchPrefetcher
+
+        batch_fn = None
+        if callable(batches):
+            batch_fn = batches
+        elif batches is not None:
+            it = itertools.cycle(batches)
+            batch_fn = lambda: next(it)  # noqa: E731 — single pump thread
+        elif self.adaptive:
+            # Adaptive needs the latest distribution at sample time; sample in
+            # the pump thread with a (≤ max_inflight steps) stale π.
+            batch_fn = lambda: self.sampler.sample_batch(  # noqa: E731
+                self.cfg.batch_size, self.adaptive.distribution())
+        pf = PreparedBatchPrefetcher(
+            self.sampler, self.executor, self.cfg.batch_size,
+            self.cfg.n_negatives, depth=max(self.cfg.prefetch, 1),
+            batch_fn=batch_fn,
+        )
+        # The main thread re-acquires the GIL every time a jit call returns
+        # from (GIL-free) XLA execution; the default 5 ms switch interval
+        # makes each re-acquisition wait on whichever host stage holds the
+        # GIL. Tightening it while pipeline threads are live keeps dispatch
+        # latency bounded; restored on exit.
+        import sys as _sys
+
+        old_switch = _sys.getswitchinterval()
+        if self.cfg.gil_switch_interval:
+            _sys.setswitchinterval(self.cfg.gil_switch_interval)
+        inflight: deque = deque()
+        t_last = time.perf_counter()
+        try:
+            for _ in range(n_steps):
+                item = pf.next()
+                fn = self._train_fn(item.prepared)
+                self.params, self.opt_state, loss, per_q = fn(
+                    self.params, self.opt_state, item.steps, item.ans,
+                    item.pos, item.neg,
+                )
+                # Snapshot on checkpoint boundaries BEFORE the next dispatch
+                # donates these buffers (jnp.copy enqueues ahead of donation).
+                step_no = self.step + len(inflight) + 1
+                snap = None
+                if (self.ckpt and self.ckpt.every > 0
+                        and step_no % self.ckpt.every == 0):
+                    snap = jax.tree.map(jnp.copy,
+                                        (self.params, self.opt_state))
+                inflight.append((loss, per_q, item.patterns, item.n_queries,
+                                 snap))
+                while len(inflight) >= max(self.cfg.max_inflight, 1):
+                    t_last = self._retire(inflight.popleft(), t_last, log_every)
+            while inflight:
+                t_last = self._retire(inflight.popleft(), t_last, log_every)
+        finally:
+            _sys.setswitchinterval(old_switch)
+            pf.close()
         if self.ckpt:
             self.ckpt.maybe_save(
                 self.step, {"params": self.params, "opt": self.opt_state}, force=True

@@ -1,0 +1,191 @@
+"""Pipelined dataflow engine (DESIGN.md §Pipeline): the pipeline must be
+SEMANTICALLY INVISIBLE — identical numerics to the sync ablation baseline —
+and the compile cache must never retrace a repeated schedule signature."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import CompileCache
+from repro.data.pipeline import PreparedBatchPrefetcher
+from repro.models import ModelConfig, make_model
+from repro.sampling import OnlineSampler
+from repro.training import AdamConfig, NGDBTrainer, TrainConfig
+
+
+def _trainer(kg, pipeline: bool, **kw) -> NGDBTrainer:
+    model = make_model(kw.pop("model", "gqe"), ModelConfig(dim=8))
+    cfg = TrainConfig(batch_size=16, n_negatives=4, b_max=32, prefetch=2,
+                      pipeline=pipeline, adam=AdamConfig(lr=1e-3), seed=0, **kw)
+    return NGDBTrainer(model, kg, cfg)
+
+
+@pytest.fixture(scope="module")
+def replay_batches(tiny_kg):
+    """Fixed mixed-pattern workload from a DEDICATED sampler so both engines'
+    own samplers draw identical negative streams during replay."""
+    src = OnlineSampler(tiny_kg, seed=123)
+    return [src.sample_batch(16) for _ in range(5)]
+
+
+def test_pipelined_matches_sync_numerics(tiny_kg, replay_batches):
+    """Same workload through both engines -> identical per-step losses and
+    bit-identical trained parameters."""
+    tr_sync = _trainer(tiny_kg, pipeline=False)
+    tr_pipe = _trainer(tiny_kg, pipeline=True)
+    tr_sync.train(len(replay_batches), log_every=0, batches=replay_batches)
+    tr_pipe.train(len(replay_batches), log_every=0, batches=replay_batches)
+
+    losses_s = [r["loss"] for r in tr_sync.history]
+    losses_p = [r["loss"] for r in tr_pipe.history]
+    np.testing.assert_allclose(losses_s, losses_p, rtol=0, atol=0)
+    for a, b in zip(jax.tree.leaves(tr_sync.params), jax.tree.leaves(tr_pipe.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipelined_matches_sync_betae(tiny_kg, replay_batches):
+    """Second backbone: the equivalence is engine-level, not model-specific."""
+    tr_sync = _trainer(tiny_kg, pipeline=False, model="betae")
+    tr_pipe = _trainer(tiny_kg, pipeline=True, model="betae")
+    tr_sync.train(3, log_every=0, batches=replay_batches[:3])
+    tr_pipe.train(3, log_every=0, batches=replay_batches[:3])
+    np.testing.assert_allclose([r["loss"] for r in tr_sync.history],
+                               [r["loss"] for r in tr_pipe.history],
+                               rtol=0, atol=0)
+
+
+def test_compile_cache_100pct_hit_on_repeat(tiny_kg, replay_batches):
+    """After one warm pass every signature is compiled: a replay of the same
+    batch list must be 100% hits — ZERO retraces."""
+    tr = _trainer(tiny_kg, pipeline=True)
+    tr.train(len(replay_batches), log_every=0, batches=replay_batches)  # warm
+    tr._train_fns.reset_counters()
+    tr.train(2 * len(replay_batches), log_every=0, batches=replay_batches)
+    st = tr._train_fns.stats()
+    assert st["misses"] == 0
+    assert st["hits"] == 2 * len(replay_batches)
+    assert st["hit_rate"] == 1.0
+
+
+def test_pipelined_respects_step_count_and_history(tiny_kg, replay_batches):
+    tr = _trainer(tiny_kg, pipeline=True)
+    tr.train(7, log_every=0, batches=replay_batches)
+    assert tr.step == 7
+    assert len(tr.history) == 7
+    assert all(np.isfinite(r["loss"]) for r in tr.history)
+
+
+def test_pipelined_online_sampling_smoke(tiny_kg):
+    """No replay list: full pipeline with sampling workers + scheduler thread."""
+    tr = _trainer(tiny_kg, pipeline=True)
+    tr.train(3, log_every=0)
+    assert tr.step == 3
+
+
+# ----------------------------------------------------------- CompileCache
+def test_compile_cache_lru_eviction_and_counters():
+    c = CompileCache(capacity=2, name="t")
+    assert c.get("a") is None                  # miss
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1                     # hit; "a" now most-recent
+    c.put("c", 3)                              # evicts LRU "b"
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.get("b") is None                  # miss after eviction
+    st = c.stats()
+    assert (st["hits"], st["misses"], st["evictions"], st["size"]) == (1, 2, 1, 2)
+    assert st["hit_rate"] == pytest.approx(1 / 3)
+    c.reset_counters()
+    assert c.stats()["hits"] == 0 and len(c) == 2  # contents survive reset
+
+
+def test_compile_cache_rejects_zero_capacity():
+    with pytest.raises(ValueError):
+        CompileCache(capacity=0)
+
+
+def test_executor_cache_stats_exposed(tiny_kg, replay_batches):
+    tr = _trainer(tiny_kg, pipeline=False)
+    tr.train(2, log_every=0, batches=replay_batches[:2])
+    stats = tr.compile_cache_stats()
+    assert set(stats) == {"train_step", "schedule", "encode"}
+    assert stats["train_step"]["misses"] >= 1
+
+
+def test_dev_static_keyed_by_structure_not_signature(tiny_kg):
+    """5 vs 6 queries of one pattern can share a program SIGNATURE (same
+    bucketed shapes) while having different slot/answer arrays — the device
+    cache must key on the structure, not the signature."""
+    from repro.data.pipeline import prepare_work_item
+
+    tr = _trainer(tiny_kg, pipeline=False)
+    src = OnlineSampler(tiny_kg, seed=5, patterns=("1p",))
+    b5, b6 = src.sample_batch(5), src.sample_batch(6)
+    cache = CompileCache(8, name="t")
+    i5 = prepare_work_item(tr.sampler, tr.executor, b5, 4, cache)
+    i6 = prepare_work_item(tr.sampler, tr.executor, b6, 4, cache)
+    if i5.prepared.signature == i6.prepared.signature:  # the collision trap
+        assert i5.prepared.structure_key != i6.prepared.structure_key
+    assert int(i5.ans.shape[0]) == 5
+    assert int(i6.ans.shape[0]) == 6
+
+
+def test_pipelined_checkpoint_roundtrip(tiny_kg, replay_batches, tmp_path):
+    """Checkpoint boundaries inside the dispatch window must snapshot params
+    before donation invalidates them; resume restores the final state."""
+    tr = _trainer(tiny_kg, pipeline=True, checkpoint_dir=str(tmp_path),
+                  checkpoint_every=3)
+    tr.train(5, log_every=0, batches=replay_batches)
+    tr2 = _trainer(tiny_kg, pipeline=True, checkpoint_dir=str(tmp_path),
+                   checkpoint_every=3)
+    assert tr2.resume()
+    assert tr2.step == 5  # final force-save
+    for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(tr2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------------------- PreparedBatchPrefetcher
+def test_prefetcher_items_match_direct_prepare(tiny_kg, replay_batches):
+    """Work items must carry canonical-order pos/neg consistent with the
+    prepared batch the main thread would have built itself."""
+    tr = _trainer(tiny_kg, pipeline=False)
+    it = iter(replay_batches)
+    pf = PreparedBatchPrefetcher(tr.sampler, tr.executor, 16, 4, depth=2,
+                                 batch_fn=lambda: next(it))
+    try:
+        item = pf.next(timeout=30.0)
+        assert item.n_queries == 16
+        assert len(item.patterns) == 16
+        assert item.pos.shape == (16,)
+        assert item.neg.shape == (16, 4)
+        # canonical order == pattern-sorted order of the prepared batch
+        assert item.patterns == sorted(item.patterns)
+        assert len(item.steps) == len(item.prepared.meta)
+    finally:
+        pf.close()
+
+
+def test_prefetcher_propagates_worker_error(tiny_kg):
+    def boom():
+        raise ValueError("no batches for you")
+
+    tr = _trainer(tiny_kg, pipeline=False)
+    pf = PreparedBatchPrefetcher(tr.sampler, tr.executor, 16, 4, batch_fn=boom)
+    with pytest.raises(RuntimeError, match="prefetcher failed"):
+        pf.next(timeout=10.0)
+    pf.close()
+
+
+def test_prefetcher_close_is_prompt(tiny_kg, replay_batches):
+    import itertools
+    import time
+
+    tr = _trainer(tiny_kg, pipeline=False)
+    it = itertools.cycle(replay_batches)
+    pf = PreparedBatchPrefetcher(tr.sampler, tr.executor, 16, 4, depth=2,
+                                 batch_fn=lambda: next(it))
+    pf.next(timeout=30.0)
+    t0 = time.monotonic()
+    pf.close()
+    assert time.monotonic() - t0 < 5.0
+    assert not pf._thread.is_alive()

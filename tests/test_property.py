@@ -1,5 +1,12 @@
-"""Hypothesis property tests on the system's invariants."""
-import hypothesis
+"""Hypothesis property tests on the system's invariants.
+
+The whole module skips when hypothesis isn't installed (it's an optional
+test dependency: ``pip install -e ".[test]"``).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
