@@ -11,8 +11,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: tput,ops,sem,adaptive,"
-                         "freebase,scaling,kernels,pipeline")
+                    help="comma-separated subset: tput,ops,sem,semstore,"
+                         "adaptive,freebase,scaling,kernels,pipeline")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -24,6 +24,8 @@ def main() -> None:
          lambda: (throughput.run(), throughput.run_schedule_stats())),
         ("ops", "Table 6: per-operator batched speedup", operator_speedup.run),
         ("sem", "Table 8/Fig 8: decoupled semantic integration", semantic.run),
+        ("semstore", "§4.4 out-of-core semantic store + hot-set cache",
+         semantic.run_store),
         ("adaptive", "Fig 9: adaptive sampling under shift", adaptive.run),
         ("freebase", "Table 2: single-hop completion runtime", runtime_freebase.run),
         ("scaling", "Fig 7/Table 2: multi-device structural scaling", scaling.run),

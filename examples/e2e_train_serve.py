@@ -63,7 +63,7 @@ def main() -> None:
 
     # phase 3: serve batched requests on the trained model
     queries = [b.query for b in OnlineSampler(kg, seed=9).sample_batch(16)]
-    results = serve_batch(model, tr.params, tr.executor, queries, top_k=5)
+    results, _ = serve_batch(model, tr.params, tr.executor, queries, top_k=5)
     print("serve sample:", results[0])
 
 

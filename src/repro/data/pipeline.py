@@ -118,8 +118,17 @@ class BatchPrefetcher:
             pass
 
 
+def batch_entity_ids(queries, pos: np.ndarray, neg: np.ndarray) -> np.ndarray:
+    """Every entity id one training step gathers semantic rows for: query
+    anchors (EMBED pools) plus the positive/negative score candidates. This
+    is the set the semantic hot-set cache must have staged before dispatch."""
+    return np.concatenate(
+        [np.asarray(q.anchors).ravel() for q in queries]
+        + [np.asarray(pos).ravel(), np.asarray(neg).ravel()])
+
+
 def prepare_work_item(sampler, executor, batch, n_negatives: int,
-                      dev_static=None) -> "PreparedWorkItem":
+                      dev_static=None, sem_cache=None) -> "PreparedWorkItem":
     """Run the full host side of one training step: negative-sampling arrays,
     canonicalization + Algorithm-1 scheduling, and device transfer.
 
@@ -129,10 +138,22 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
     per step. The structure key is essential: the coarser program signature
     only encodes bucketed shapes, and two different structures (e.g. 5 vs 6
     queries padding to the same buckets) may share a signature while having
-    different slot/answer arrays."""
+    different slot/answer arrays.
+
+    ``sem_cache`` (optional, a ``semantic.store.SemanticCache``) is the
+    prefetch half of the out-of-core semantic path: the batch's entity-id
+    set is extracted HERE, on the scheduler thread, and the missing rows are
+    read from the on-disk store, dequantized and device-put while the
+    previous batch executes — the returned ``sem_stage`` is applied by the
+    main thread right before this batch dispatches, so steady-state training
+    never does a synchronous mid-step store read."""
     import jax.numpy as jnp  # deferred: keep module import light
 
     queries, pos, neg = sampler.to_training_arrays(batch, n_negatives)
+    sem_stage = None
+    if sem_cache is not None:
+        sem_stage = sem_cache.plan(batch_entity_ids(queries, pos, neg),
+                                   background=True)
     prepared = executor.prepare(queries)
     static = (dev_static.get(prepared.structure_key)
               if dev_static is not None else None)
@@ -157,6 +178,7 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
         neg=jnp.asarray(neg[prepared.order]),
         patterns=prepared.patterns,
         n_queries=len(queries),
+        sem_stage=sem_stage,
     )
 
 
@@ -177,6 +199,9 @@ class PreparedWorkItem:
     neg: object                 # [B, K] negatives, canonical order (device)
     patterns: List[str]         # canonical order, for adaptive sampling
     n_queries: int
+    sem_stage: object = None    # semantic.store.SemStage: rows prefetched on
+    #                             the scheduler thread; main thread applies
+    #                             it (one donated scatter) before dispatch
 
 
 class PreparedBatchPrefetcher:
@@ -206,10 +231,12 @@ class PreparedBatchPrefetcher:
         depth: int = 2,
         workers: int = 2,
         batch_fn: Optional[Callable[[], List[SampledQuery]]] = None,
+        sem_cache=None,
     ):
         self.sampler = sampler
         self.executor = executor
         self.n_negatives = n_negatives
+        self.sem_cache = sem_cache
         self._q: "queue.Queue[PreparedWorkItem]" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
@@ -234,7 +261,8 @@ class PreparedBatchPrefetcher:
             try:
                 batch = self._next_batch()
                 item = prepare_work_item(self.sampler, self.executor, batch,
-                                         self.n_negatives, self._dev_static)
+                                         self.n_negatives, self._dev_static,
+                                         sem_cache=self.sem_cache)
             except BaseException as e:  # surface on the consumer side
                 if self._error is None:
                     self._error = e

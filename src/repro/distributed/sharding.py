@@ -60,6 +60,9 @@ _MATRIX_RULES: Dict[str, Tuple[Optional[str], ...]] = {
     "pos_embed": (None, None),
     # NGDB tables
     "entity": ("model", None), "sem_table": ("model", None), "relation": (None, None),
+    # Out-of-core semantic hot set (semantic/store.py): bounded by the row
+    # budget, so replicate — the scatter staging path stays collective-free.
+    "sem_cache": (None, None),
 }
 _MOE_RULES_TP = {
     "moe_gate": (None, "data", "model"), "moe_up": (None, "data", "model"),

@@ -1,12 +1,18 @@
 """Pallas TPU kernel: GPU(HBM)-resident semantic integration (Eq. 11 + 12).
 
-e_fused = sigmoid(W_f [h_str[ids] ⊕ (h_sem[ids] W_p + b_p)] + b_f) * 2 - 1
+e_fused = sigmoid(W_f [h_str[ids] ⊕ (h_sem[sem_ids] W_p + b_p)] + b_f) * 2 - 1
 
 The tables stay in HBM (pltpu.ANY); each grid step DMAs exactly the rows it
 needs into VMEM using scalar-prefetched indices (PrefetchScalarGridSpec) —
 the TPU analogue of the paper's "high-speed tensor indexing" gather: the
 semantic manifold is never densified or round-tripped, and the projection +
 concat + affine + activation all happen in VMEM right after the row DMA.
+
+Two scalar-prefetch index streams because the semantic table may be the
+out-of-core HOT-SET CACHE (DESIGN.md §SemanticStore): there ``h_sem`` is the
+bounded ``sem_cache`` buffer and ``sem_ids`` are cache SLOTS
+(``sem_slot[ids]``), distinct from the structural entity ids. In the
+full-resident layout both streams carry the same entity ids.
 
 Rows are processed in blocks of ``rows`` per grid step; callers pad ids.
 """
@@ -20,8 +26,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gather_fuse_kernel(ids_ref, hstr_ref, hsem_ref, wp_ref, bp_ref, wf_ref, bf_ref, o_ref,
-                        *, rows: int):
+def _gather_fuse_kernel(ids_ref, sem_ids_ref, hstr_ref, hsem_ref, wp_ref,
+                        bp_ref, wf_ref, bf_ref, o_ref, *, rows: int):
     h = hstr_ref[...].astype(jnp.float32)                    # [rows, d]
     z = hsem_ref[...].astype(jnp.float32)                    # [rows, dl]
     zp = (
@@ -42,13 +48,15 @@ def _gather_fuse_kernel(ids_ref, hstr_ref, hsem_ref, wp_ref, bp_ref, wf_ref, bf_
 
 @functools.partial(jax.jit, static_argnames=("rows", "interpret"))
 def gather_fuse_pallas(
-    ids: jnp.ndarray,    # [n] int32 — row indices into both tables
-    h_str: jnp.ndarray,  # [E, d]
-    h_sem: jnp.ndarray,  # [E, dl]  (the frozen H_sem buffer)
-    wp: jnp.ndarray,     # [dl, dp]
-    bp: jnp.ndarray,     # [dp]
-    wf: jnp.ndarray,     # [d+dp, d]
-    bf: jnp.ndarray,     # [d]
+    ids: jnp.ndarray,      # [n] int32 — row indices into h_str
+    h_str: jnp.ndarray,    # [E, d]
+    h_sem: jnp.ndarray,    # [E, dl] full H_sem, or [budget, dl] hot-set cache
+    wp: jnp.ndarray,       # [dl, dp]
+    bp: jnp.ndarray,       # [dp]
+    wf: jnp.ndarray,       # [d+dp, d]
+    bf: jnp.ndarray,       # [d]
+    sem_ids: jnp.ndarray = None,  # [n] int32 rows into h_sem (cache slots);
+    #                               None = same as ``ids`` (full-resident)
     *,
     rows: int = 8,
     interpret: bool = False,
@@ -58,31 +66,42 @@ def gather_fuse_pallas(
     _, dl = h_sem.shape
     dp = wp.shape[1]
     assert n % rows == 0, (n, rows)
+    if sem_ids is None:
+        sem_ids = ids
+    assert sem_ids.shape == ids.shape, (sem_ids.shape, ids.shape)
     # Block index i selects rows [ids[i*rows + r] for r in range(rows)]; with
     # a row-blocked table BlockSpec the index_map returns the *row block* to
     # DMA. We gather row-by-row (block height 1) and let the grid supply the
-    # row position — the standard Pallas scalar-prefetch gather pattern.
+    # row position — the standard Pallas scalar-prefetch gather pattern. The
+    # two scalar-prefetch streams feed the two tables independently.
     grid = (n,)
 
-    def tbl_map(i, ids_ref):
+    def str_map(i, ids_ref, sem_ids_ref):
         return (ids_ref[i], 0)
+
+    def sem_map(i, ids_ref, sem_ids_ref):
+        return (sem_ids_ref[i], 0)
+
+    def rep_map(i, ids_ref, sem_ids_ref):
+        return (0, 0)
 
     out = pl.pallas_call(
         functools.partial(_gather_fuse_kernel, rows=1),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, d), tbl_map),
-                pl.BlockSpec((1, dl), tbl_map),
-                pl.BlockSpec((dl, dp), lambda i, ids_ref: (0, 0)),
-                pl.BlockSpec((1, dp), lambda i, ids_ref: (0, 0)),
-                pl.BlockSpec((d + dp, d), lambda i, ids_ref: (0, 0)),
-                pl.BlockSpec((1, d), lambda i, ids_ref: (0, 0)),
+                pl.BlockSpec((1, d), str_map),
+                pl.BlockSpec((1, dl), sem_map),
+                pl.BlockSpec((dl, dp), rep_map),
+                pl.BlockSpec((1, dp), rep_map),
+                pl.BlockSpec((d + dp, d), rep_map),
+                pl.BlockSpec((1, d), rep_map),
             ],
-            out_specs=pl.BlockSpec((1, d), lambda i, ids_ref: (i, 0)),
+            out_specs=pl.BlockSpec((1, d), lambda i, ids_ref, sem_ids_ref: (i, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((n, d), h_str.dtype),
         interpret=interpret,
-    )(ids.astype(jnp.int32), h_str, h_sem, wp, bp.reshape(1, dp), wf, bf.reshape(1, d))
+    )(ids.astype(jnp.int32), sem_ids.astype(jnp.int32),
+      h_str, h_sem, wp, bp.reshape(1, dp), wf, bf.reshape(1, d))
     return out

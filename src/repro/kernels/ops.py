@@ -66,11 +66,32 @@ def intersect(x, w1, b1, w2, b2, bn: int = 256, interpret: bool | None = None):
     return out[:n]
 
 
-def gather_fuse(ids, h_str, h_sem, wp, bp, wf, bf, interpret: bool | None = None):
-    """ids [n] -> fused entity vectors [n, d] (Eq. 11+12)."""
+def gather_fuse(ids, h_str, h_sem, wp, bp, wf, bf, sem_ids=None,
+                interpret: bool | None = None):
+    """ids [n] -> fused entity vectors [n, d] (Eq. 11+12).
+
+    ``sem_ids`` indexes ``h_sem`` independently of ``ids`` — pass the cache
+    slots (``params["sem_slot"][ids]``) with the hot-set ``sem_cache`` buffer
+    for the out-of-core layout (DESIGN.md §SemanticStore); defaults to
+    ``ids`` for the full-resident table."""
     if interpret is None:
         interpret = not _on_tpu()
-    return gather_fuse_pallas(ids, h_str, h_sem, wp, bp, wf, bf, interpret=interpret)
+    return gather_fuse_pallas(ids, h_str, h_sem, wp, bp, wf, bf, sem_ids,
+                              interpret=interpret)
+
+
+def gather_fuse_params(params, ids, interpret: bool | None = None):
+    """Drive the kernel straight from a model params dict, resolving the
+    semantic layout the same way ``models/base.py::semantic_rows`` does."""
+    if "sem_slot" in params:
+        h_sem = params["sem_cache"]
+        sem_ids = params["sem_slot"][ids]
+    else:
+        h_sem = params["sem_table"]
+        sem_ids = None
+    return gather_fuse(ids, params["entity"], h_sem, params["sem_proj_w"],
+                       params["sem_proj_b"], params["fuse_w"],
+                       params["fuse_b"], sem_ids=sem_ids, interpret=interpret)
 
 
 # Re-exported oracles (tests + fallback paths).

@@ -6,6 +6,14 @@ decoupled semantic augmentation and adaptive sampling.
 
   PYTHONPATH=src python -m repro.launch.train --dataset FB15k --model betae \
       --steps 200 --batch-size 128 --dim 64 --semantic --ckpt-dir /tmp/ckpt
+
+Semantic at scale (DESIGN.md §SemanticStore): pass ``--semantic-store DIR``
+to keep H_sem on disk (sharded mmap, built once, reused across runs) with
+only a bounded device-resident hot set:
+
+  PYTHONPATH=src python -m repro.launch.train --dataset FB15k --model gqe \
+      --semantic --semantic-store /tmp/sem --semantic-budget-rows 2048 \
+      --semantic-quant fp32 --pipeline --steps 200
 """
 from __future__ import annotations
 
@@ -18,8 +26,35 @@ import numpy as np
 from repro.data import load_dataset
 from repro.models import ModelConfig, make_model, model_names
 from repro.sampling import OnlineSampler
-from repro.semantic import PTEConfig, StubPTE, precompute_semantic_table
+from repro.semantic import (PTEConfig, SemanticCache, SemanticStore,
+                            SemanticStoreError, StubPTE,
+                            precompute_semantic_table,
+                            precompute_semantic_table_to_store)
 from repro.training import AdamConfig, NGDBTrainer, TrainConfig, evaluate
+
+
+def open_or_build_store(directory: str, kg, d_l: int, quant: str,
+                        shard_rows: int = 65536) -> SemanticStore:
+    """Reuse a complete store if one is already on disk (matching shape and
+    quant layout); otherwise stream the offline precompute into it."""
+    try:
+        store = SemanticStore(directory)
+        if (store.n_rows, store.dim, store.quant) == (kg.n_entities, d_l, quant):
+            print(f"semantic store: reusing {directory} "
+                  f"({store.n_rows}x{store.dim} {store.quant}, "
+                  f"{store.disk_nbytes/1e6:.1f} MB on disk)")
+            return store
+        print("semantic store: shape/quant mismatch — rebuilding")
+    except SemanticStoreError as e:
+        print(f"semantic store: {e}")
+    t0 = time.time()
+    pte = StubPTE(PTEConfig(d_l=d_l, n_layers=2, d_model=128))
+    store = precompute_semantic_table_to_store(
+        kg, directory, pte, quant=quant, shard_rows=shard_rows)
+    print(f"semantic store: built {store.n_rows}x{store.dim} {quant} at "
+          f"{directory} in {time.time()-t0:.1f}s "
+          f"({store.disk_nbytes/1e6:.1f} MB, PTE unloaded)")
+    return store
 
 
 def main() -> None:
@@ -33,26 +68,54 @@ def main() -> None:
     ap.add_argument("--negatives", type=int, default=32)
     ap.add_argument("--semantic", action="store_true")
     ap.add_argument("--semantic-dim", type=int, default=256)
+    ap.add_argument("--semantic-store", default=None, metavar="DIR",
+                    help="out-of-core H_sem: sharded mmap store on disk + a "
+                         "bounded device-resident hot-set cache (implies "
+                         "--semantic); built at DIR on first use")
+    ap.add_argument("--semantic-budget-rows", type=int, default=0,
+                    help="device hot-set row budget for --semantic-store "
+                         "(0 = auto: 4x the per-batch working set)")
+    ap.add_argument("--semantic-quant", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="on-disk layout: fp32 is bit-identical to "
+                         "full-resident training; int8 is 4x smaller with "
+                         "per-row scales")
     ap.add_argument("--adaptive", action="store_true")
     ap.add_argument("--executor", default="pooled", choices=["pooled", "query_level"])
     ap.add_argument("--pipeline", action="store_true",
                     help="pipelined dataflow mode: overlap Algorithm-1 "
                          "scheduling for batch k+1 with device execution of "
-                         "batch k (sync mode is the ablation baseline)")
+                         "batch k (sync mode is the ablation baseline); with "
+                         "--semantic-store this also prefetches semantic rows "
+                         "on the scheduler thread (zero mid-step store reads)")
     ap.add_argument("--max-inflight", type=int, default=2,
                     help="pipelined dispatch window (2 = double-buffered)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-queries", type=int, default=64)
     ap.add_argument("--log-every", type=int, default=20)
     args = ap.parse_args()
+    if args.semantic_store:
+        args.semantic = True
 
     kg, full_kg, stats = load_dataset(args.dataset)
     print(f"dataset={args.dataset} (reduced stand-in): "
           f"{kg.n_entities} entities, {kg.n_relations} relations, {len(kg)} train triples")
 
-    table = None
+    table, store, cache = None, None, None
     sem_dim = 0
-    if args.semantic:
+    if args.semantic_store:
+        sem_dim = args.semantic_dim
+        store = open_or_build_store(args.semantic_store, kg, sem_dim,
+                                    args.semantic_quant)
+        # Working set of one step: anchors (<=3/query) + positive + negatives.
+        per_batch = args.batch_size * (4 + args.negatives)
+        budget = args.semantic_budget_rows or min(kg.n_entities, 4 * per_batch)
+        budget = max(budget, min(kg.n_entities, per_batch))
+        cache = SemanticCache(store, budget_rows=budget)
+        print(f"semantic cache: {budget} device rows "
+              f"({cache.device_resident_sem_bytes/1e6:.2f} MB device-resident "
+              f"vs {kg.n_entities * sem_dim * 4/1e6:.2f} MB full-resident)")
+    elif args.semantic:
         t0 = time.time()
         pte = StubPTE(PTEConfig(d_l=args.semantic_dim, n_layers=2, d_model=128))
         table = precompute_semantic_table(kg, pte)
@@ -67,7 +130,8 @@ def main() -> None:
         executor=args.executor, checkpoint_dir=args.ckpt_dir,
         pipeline=args.pipeline, max_inflight=args.max_inflight,
     )
-    trainer = NGDBTrainer(model, kg, cfg, semantic_table=table)
+    trainer = NGDBTrainer(model, kg, cfg, semantic_table=table,
+                          semantic_cache=cache)
     if trainer.resume():
         print(f"resumed from checkpoint at step {trainer.step}")
 
@@ -84,10 +148,30 @@ def main() -> None:
     print(f"trained {args.steps} steps [{mode}] in {dt:.1f}s ({qps:.0f} queries/sec)")
     print(f"compile cache: {cc['size']} programs, "
           f"hit rate {cc['hit_rate']:.2%} ({cc['misses']} traces)")
+    if cache is not None:
+        cs = cache.stats()
+        print(f"semantic cache: hit rate {cs['hit_rate']:.2%}, "
+              f"{cs['evictions']} evictions, "
+              f"{cs['device_resident_sem_bytes']/1e6:.2f} MB device-resident, "
+              f"prefetch overlap {cs['prefetch_overlap_frac']:.2%} "
+              f"({cs['sync_stages']} synchronous mid-step reads)")
 
     eval_qs = [b.query for b in OnlineSampler(kg, seed=123).sample_batch(args.eval_queries)]
+    score_all_fn = None
+    if cache is not None:
+        # Encoding eval queries gathers their anchors through the cache;
+        # stage them once up front. Scoring streams H_sem from the store.
+        anchors = np.unique(np.concatenate([q.anchors for q in eval_qs]))
+        try:
+            stage = cache.plan(anchors)
+        except RuntimeError as e:
+            print(f"eval skipped: {e}")
+            return
+        if stage is not None:
+            trainer.params = cache.apply_to(trainer.params, stage)
+        score_all_fn = lambda p, q: model.score_all_chunked(p, q, store.read_rows)  # noqa: E731
     metrics = evaluate(model, trainer.params, trainer.executor, full_kg,
-                       eval_qs, train_kg=kg)
+                       eval_qs, train_kg=kg, score_all_fn=score_all_fn)
     print("eval:", json.dumps({k: round(float(v), 4) for k, v in metrics.items()}))
 
 

@@ -106,7 +106,18 @@ class QueryEncoder:
         return ((n_entities + m - 1) // m) * m
 
     def init_params(self, key, n_entities: int, n_relations: int,
-                    semantic_table: Optional[jnp.ndarray] = None) -> Dict:
+                    semantic_table: Optional[jnp.ndarray] = None,
+                    semantic_cache=None) -> Dict:
+        """Semantic mode is decided by which buffer is supplied:
+
+        * ``semantic_table`` — full-resident frozen ``sem_table`` (small
+          graphs / ablation baseline);
+        * ``semantic_cache`` — a ``semantic.store.SemanticCache``: the params
+          carry the bounded ``sem_cache`` hot-set buffer plus the
+          ``sem_slot`` entity-id -> cache-slot indirection instead of the
+          full table. Gathers must be preceded by ``cache.plan``/``apply_to``
+          (the pipeline does this for training batches).
+        """
         k1, k2, k3 = jax.random.split(key, 3)
         d = self.cfg.dim
         self.n_entities = n_entities  # real count; tables may be padded
@@ -114,11 +125,18 @@ class QueryEncoder:
         p = {"entity": jax.random.normal(k1, (rows, d)) * (1.0 / np.sqrt(d))}
         p.update(self.init_geometry(k2, n_entities, n_relations))
         if self.cfg.semantic_dim > 0:
-            assert semantic_table is not None and semantic_table.shape[1] == self.cfg.semantic_dim
-            st = jnp.asarray(semantic_table)
-            if st.shape[0] < rows:
-                st = jnp.pad(st, ((0, rows - st.shape[0]), (0, 0)))
-            p["sem_table"] = st  # frozen H_sem buffer
+            if semantic_cache is not None:
+                assert semantic_cache.dim == self.cfg.semantic_dim, (
+                    semantic_cache.dim, self.cfg.semantic_dim)
+                assert semantic_cache.n_rows >= n_entities
+                p["sem_cache"] = semantic_cache.buffer   # [budget, d_l] hot set
+                p["sem_slot"] = semantic_cache.slot_map  # [E] id -> slot
+            else:
+                assert semantic_table is not None and semantic_table.shape[1] == self.cfg.semantic_dim
+                st = jnp.asarray(semantic_table)
+                if st.shape[0] < rows:
+                    st = jnp.pad(st, ((0, rows - st.shape[0]), (0, 0)))
+                p["sem_table"] = st  # frozen H_sem buffer
             dp = self.cfg.semantic_proj_dim
             p["sem_proj_w"] = glorot(k3, (self.cfg.semantic_dim, dp))
             p["sem_proj_b"] = jnp.zeros((dp,))
@@ -128,8 +146,27 @@ class QueryEncoder:
         return p
 
     def frozen_param_names(self):
-        """Params excluded from gradients (the GPU-resident H_sem buffer)."""
-        return ("sem_table",)
+        """Params excluded from gradients AND from real optimizer moments:
+        the H_sem buffer in either layout (full-resident table, or hot-set
+        cache + its int32 indirection — the latter could not be
+        differentiated at all)."""
+        return ("sem_table", "sem_cache", "sem_slot")
+
+    def semantic_rows(self, params, ent_ids) -> jnp.ndarray:
+        """Gather(H_sem, I) — Eq. 11, in whichever layout the params carry:
+        the full-resident ``sem_table`` or the device cache via the
+        ``sem_slot`` indirection (ids must have been staged by the cache)."""
+        if "sem_slot" in params:
+            return params["sem_cache"][params["sem_slot"][ent_ids]]
+        return params["sem_table"][ent_ids]
+
+    def fuse_semantic(self, params, h, z) -> jnp.ndarray:
+        """Eq. 12 on already-gathered rows: h [.., d] structural, z [.., d_l]
+        semantic -> fused [.., d]. Shared by the train-time gather path and
+        the chunked/streaming scorers, so their numerics are identical."""
+        z = z @ params["sem_proj_w"] + params["sem_proj_b"]   # F: d_l -> dp
+        x = jnp.concatenate([h, z], axis=-1)
+        return jax.nn.sigmoid(x @ params["fuse_w"] + params["fuse_b"]) * 2.0 - 1.0
 
     def fused_entity_vec(self, params, ent_ids) -> jnp.ndarray:
         """x_i = sigma(W_p [h_str ⊕ F(h_sem)] + b_p) — Eq. 12. Pure gathers +
@@ -137,10 +174,7 @@ class QueryEncoder:
         h = params["entity"][ent_ids]
         if self.cfg.semantic_dim == 0:
             return h
-        z = params["sem_table"][ent_ids]                      # Gather(H_sem, I) — Eq. 11
-        z = z @ params["sem_proj_w"] + params["sem_proj_b"]   # F: d_l -> dp
-        x = jnp.concatenate([h, z], axis=-1)
-        return jax.nn.sigmoid(x @ params["fuse_w"] + params["fuse_b"]) * 2.0 - 1.0
+        return self.fuse_semantic(params, h, self.semantic_rows(params, ent_ids))
 
     def embed(self, params, ent_ids) -> jnp.ndarray:
         return self.entity_state(params, self.fused_entity_vec(params, ent_ids))
@@ -154,6 +188,12 @@ class QueryEncoder:
     def score_all(self, params, q) -> jnp.ndarray:
         """Logits against EVERY entity (vectorized logit formulation, Eq. 6).
         Padded table rows are masked to -inf."""
+        if "sem_slot" in params:
+            raise RuntimeError(
+                "score_all needs every entity's semantic row, but these "
+                "params carry the bounded hot-set cache; use "
+                "score_all_chunked(params, q, store.read_rows) to stream "
+                "over the on-disk store instead")
         rows = params["entity"].shape[0]
         ids = jnp.arange(rows)
         ev = self.fused_entity_vec(params, ids)               # [E, dim]
@@ -169,6 +209,30 @@ class QueryEncoder:
         if n_real != rows:
             scores = jnp.where(ids[None, :] < n_real, scores, -1e30)
         return scores
+
+    def score_all_chunked(self, params, q, sem_rows_fn,
+                          chunk: int = 4096) -> np.ndarray:
+        """Out-of-core twin of ``score_all`` for the semantic-store path:
+        streams entity chunks (structural slice + ``sem_rows_fn(ids)`` rows
+        read from the store), fuses and scores each on device, and assembles
+        host scores — the full ``[E, d_l]`` table never exists anywhere.
+        Returns np [B, n_real]; ``sem_rows_fn`` is e.g.
+        ``SemanticStore.read_rows``. Works for resident params too (pass
+        ``lambda ids: np.asarray(params["sem_table"])[ids]``)."""
+        rows = params["entity"].shape[0]
+        n_real = getattr(self, "n_entities", rows)
+        outs = []
+        for lo in range(0, n_real, chunk):
+            hi = min(lo + chunk, n_real)
+            h = params["entity"][lo:hi]
+            if self.cfg.semantic_dim > 0:
+                z = jnp.asarray(sem_rows_fn(np.arange(lo, hi)))
+                ev = self.fuse_semantic(params, h, z)
+            else:
+                ev = h
+            outs.append(np.asarray(
+                self.cfg.gamma - self.distance(params, q[:, None, :], ev[None, :, :])))
+        return np.concatenate(outs, axis=1)
 
 
 _REGISTRY: Dict[str, Callable[[ModelConfig], QueryEncoder]] = {}

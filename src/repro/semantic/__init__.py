@@ -1,3 +1,22 @@
-from repro.semantic.pte import PTEConfig, StubPTE, precompute_semantic_table
+from repro.semantic.pte import (PTEConfig, StubPTE, encode_normalized_batches,
+                                precompute_semantic_table)
+from repro.semantic.store import (SemanticCache, SemanticStore,
+                                  SemanticStoreError, SemanticStoreWriter,
+                                  SemStage, dequantize_int8,
+                                  precompute_semantic_table_to_store,
+                                  quantize_int8)
 
-__all__ = ["PTEConfig", "StubPTE", "precompute_semantic_table"]
+__all__ = [
+    "PTEConfig",
+    "StubPTE",
+    "encode_normalized_batches",
+    "precompute_semantic_table",
+    "SemanticCache",
+    "SemanticStore",
+    "SemanticStoreError",
+    "SemanticStoreWriter",
+    "SemStage",
+    "quantize_int8",
+    "dequantize_int8",
+    "precompute_semantic_table_to_store",
+]

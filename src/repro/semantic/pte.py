@@ -63,17 +63,27 @@ class StubPTE:
     # -- synthetic descriptions ------------------------------------------------
     @staticmethod
     def descriptions(kg: KnowledgeGraph, ent_ids: np.ndarray) -> np.ndarray:
-        """Token sequence per entity: hashed id tokens + first neighbors."""
+        """Token sequence per entity: hashed id tokens + first neighbors.
+
+        Fully vectorized (one numpy pass per neighbor position, not a Python
+        loop per entity) so store precompute on large synthetic KGs is not
+        host-bound on tokenization."""
         indptr, rels, tails = kg.relations_by_head
-        toks = np.zeros((len(ent_ids), _DESC_LEN), dtype=np.int32)
-        for i, e in enumerate(np.asarray(ent_ids)):
-            e = int(e)
-            row = [e % _VOCAB, (e * 2654435761) % _VOCAB]
-            lo, hi = indptr[e], indptr[e + 1]
-            for j in range(lo, min(hi, lo + (_DESC_LEN - 2) // 2)):
-                row.append(int(rels[j]) % _VOCAB)
-                row.append(int(tails[j]) % _VOCAB)
-            toks[i, : len(row)] = row[:_DESC_LEN]
+        ids = np.asarray(ent_ids, dtype=np.int64).ravel()
+        toks = np.zeros((len(ids), _DESC_LEN), dtype=np.int32)
+        toks[:, 0] = ids % _VOCAB
+        # (e * K) % V == ((e % V) * (K % V)) % V — overflow-safe in int64.
+        toks[:, 1] = (ids % _VOCAB) * (2654435761 % _VOCAB) % _VOCAB
+        lo = indptr[ids]
+        max_pairs = (_DESC_LEN - 2) // 2
+        deg = np.minimum(indptr[ids + 1] - lo, max_pairs)
+        for j in range(max_pairs):
+            m = deg > j
+            if not m.any():
+                break
+            src = lo[m] + j
+            toks[m, 2 + 2 * j] = rels[src] % _VOCAB
+            toks[m, 3 + 2 * j] = tails[src] % _VOCAB
         return toks
 
     # -- forward ---------------------------------------------------------------
@@ -109,6 +119,24 @@ class StubPTE:
         self.unloaded = True
 
 
+def encode_normalized_batches(kg: KnowledgeGraph, pte: StubPTE,
+                              batch_size: int = 256):
+    """Yield L2-normalized encoder outputs in fixed global batch boundaries.
+
+    Shared by the in-memory ``precompute_semantic_table`` and the streaming
+    ``semantic/store.py::precompute_semantic_table_to_store``. Both consume
+    the SAME batch boundaries (``range(0, E, batch_size)``) so the jitted
+    encoder sees identical shapes and the two paths stay bit-identical;
+    normalization is per-row, hence batch-local."""
+    enc = jax.jit(pte.encode_tokens)
+    ids = np.arange(kg.n_entities)
+    for lo in range(0, kg.n_entities, batch_size):
+        chunk = ids[lo : lo + batch_size]
+        block = np.array(enc(jnp.asarray(StubPTE.descriptions(kg, chunk))))
+        block /= np.linalg.norm(block, axis=1, keepdims=True) + 1e-6
+        yield block
+
+
 def precompute_semantic_table(
     kg: KnowledgeGraph,
     pte: Optional[StubPTE] = None,
@@ -119,16 +147,15 @@ def precompute_semantic_table(
     """Offline pre-computation phase (Eq. 10): encode every entity, L2
     normalize, then one hop of neighbor smoothing (stands in for the semantic
     relatedness real descriptions carry). Returns host numpy; callers register
-    it as a device-resident buffer."""
+    it as a device-resident buffer.
+
+    This is the FULL-RESIDENT path (small graphs / ablation). At scale, use
+    ``semantic/store.py::precompute_semantic_table_to_store`` — it streams the
+    same computation shard-by-shard to disk without ever holding the
+    ``[E, d_l]`` table in host RAM, and its fp32 output is bit-identical."""
     pte = pte or StubPTE()
-    enc = jax.jit(pte.encode_tokens)
-    out = []
-    ids = np.arange(kg.n_entities)
-    for lo in range(0, kg.n_entities, batch_size):
-        chunk = ids[lo : lo + batch_size]
-        out.append(np.asarray(enc(jnp.asarray(StubPTE.descriptions(kg, chunk)))))
-    table = np.concatenate(out, axis=0)
-    table /= np.linalg.norm(table, axis=1, keepdims=True) + 1e-6
+    table = np.concatenate(
+        list(encode_normalized_batches(kg, pte, batch_size)), axis=0)
     if smooth > 0:
         nb = np.zeros_like(table)
         cnt = np.ones((kg.n_entities, 1))

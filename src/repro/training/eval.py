@@ -32,11 +32,17 @@ def evaluate(
     queries: Sequence[QueryInstance],
     train_kg: KnowledgeGraph = None,
     batch_size: int = 64,
+    score_all_fn=None,
 ) -> Dict[str, float]:
     """Filtered MRR / Hits over the *full* graph answers. If ``train_kg`` is
     given, metrics are also split into easy (observed) vs hard (predictive)
-    answers — the paper's A_obs vs A_miss distinction."""
-    score_all = jax.jit(model.score_all)
+    answers — the paper's A_obs vs A_miss distinction.
+
+    ``score_all_fn`` overrides the dense all-entity scorer — the semantic-
+    store path passes ``lambda p, q: model.score_all_chunked(p, q,
+    store.read_rows)`` so evaluation streams H_sem from disk instead of
+    requiring a full-resident table."""
+    score_all = score_all_fn or jax.jit(model.score_all)
     mrr, h1, h3, h10, n = 0.0, 0.0, 0.0, 0.0, 0
     hard_mrr, hard_n = 0.0, 0
     per_pattern: Dict[str, List[float]] = {}

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.compile_cache import CompileCache
 from repro.core.executor import PooledExecutor, PreparedBatch, QueryLevelExecutor
+from repro.data.pipeline import batch_entity_ids
 from repro.core.patterns import TEMPLATES
 from repro.sampling.adaptive import AdaptiveDistribution, pattern_losses_from_batch
 from repro.sampling.online import OnlineSampler, SampledQuery
@@ -59,7 +60,8 @@ class TrainConfig:
 
 
 class NGDBTrainer:
-    def __init__(self, model, kg, cfg: TrainConfig, semantic_table=None):
+    def __init__(self, model, kg, cfg: TrainConfig, semantic_table=None,
+                 semantic_cache=None):
         self.model = model
         self.kg = kg
         self.cfg = cfg
@@ -69,9 +71,14 @@ class NGDBTrainer:
         else:
             self.executor = QueryLevelExecutor(model, b_max=cfg.b_max)
             self.executor.encode_fn = None  # query-level path handled eagerly
+        # Out-of-core semantic mode (semantic/store.py): the params carry a
+        # bounded device hot set + indirection instead of the full H_sem;
+        # every batch's rows are staged (plan/apply_to) before dispatch.
+        self.sem_cache = semantic_cache
         key = jax.random.PRNGKey(cfg.seed)
         self.params = model.init_params(
-            key, kg.n_entities, kg.n_relations, semantic_table=semantic_table
+            key, kg.n_entities, kg.n_relations, semantic_table=semantic_table,
+            semantic_cache=semantic_cache,
         )
         self.opt_state = adam_init(self.params)
         self.sampler = OnlineSampler(kg, patterns=cfg.patterns, seed=cfg.seed)
@@ -86,6 +93,17 @@ class NGDBTrainer:
         self.history: List[Dict] = []
 
     # ------------------------------------------------------------------ fns
+    def _split_frozen(self, params):
+        """(trainable, frozen) views of the params dict. Frozen buffers —
+        H_sem in either layout, including the int32 cache indirection which
+        could not be differentiated at all — are closed over by the loss, so
+        XLA never materializes gradients for them (at d_l=1024 a sem_table
+        cotangent would double the largest buffer in the step)."""
+        frozen_names = set(self.model.frozen_param_names())
+        trainable = {k: v for k, v in params.items() if k not in frozen_names}
+        frozen = {k: v for k, v in params.items() if k in frozen_names}
+        return trainable, frozen
+
     def _train_fn(self, prepared: PreparedBatch):
         sig = prepared.signature
         fn = self._train_fns.get(sig)
@@ -95,11 +113,17 @@ class NGDBTrainer:
         encode = self.executor.encode_fn(prepared)
 
         def step_fn(params, opt_state, steps, ans_slots, pos, neg):
-            def loss_fn(p):
+            trainable, frozen = self._split_frozen(params)
+
+            def loss_fn(t):
+                p = {**t, **frozen}
                 q = encode(p, steps, ans_slots)
                 return negative_sampling_loss(model, p, q, pos, neg)
 
-            (loss, per_q), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            (loss, per_q), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+            # Token gradients for frozen leaves keep the pytree aligned with
+            # params/opt_state; adam_update skips them by name.
+            grads = {**grads, **{k: jnp.zeros((1,), jnp.float32) for k in frozen}}
             params, opt_state = adam_update(grads, opt_state, params, cfg.adam)
             return params, opt_state, loss, per_q
 
@@ -112,6 +136,8 @@ class NGDBTrainer:
         out = {"train_step": self._train_fns.stats()}
         ex = self.executor if isinstance(self.executor, PooledExecutor) else self.executor._inner
         out.update(ex.cache_stats())
+        if self.sem_cache is not None:
+            out["sem_cache"] = self.sem_cache.stats()
         return out
 
     # ----------------------------------------------------------------- steps
@@ -120,6 +146,12 @@ class NGDBTrainer:
             dist = self.adaptive.distribution() if self.adaptive else None
             batch = self.sampler.sample_batch(self.cfg.batch_size, dist)
         queries, pos, neg = self.sampler.to_training_arrays(batch, self.cfg.n_negatives)
+        if self.sem_cache is not None:
+            # Sync mode stages on the critical path (the pipelined loop does
+            # this on the scheduler thread instead — zero mid-step reads).
+            stage = self.sem_cache.plan(batch_entity_ids(queries, pos, neg))
+            if stage is not None:
+                self.params = self.sem_cache.apply_to(self.params, stage)
         t0 = time.perf_counter()
         if isinstance(self.executor, PooledExecutor):
             prepared = self.executor.prepare(queries)
@@ -162,11 +194,15 @@ class NGDBTrainer:
         model = self.model
 
         def gfn(params, steps, ans, pos, neg):
-            def loss_fn(p):
+            trainable, frozen = self._split_frozen(params)
+
+            def loss_fn(t):
+                p = {**t, **frozen}
                 qs = encode(p, steps, ans)
                 return negative_sampling_loss(model, p, qs, pos, neg)
 
-            (loss, per_q), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            (loss, per_q), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+            grads = {**grads, **{k: jnp.zeros((1,), jnp.float32) for k in frozen}}
             return loss, per_q, grads
 
         fn = jax.jit(gfn)
@@ -315,7 +351,7 @@ class NGDBTrainer:
         pf = PreparedBatchPrefetcher(
             self.sampler, self.executor, self.cfg.batch_size,
             self.cfg.n_negatives, depth=max(self.cfg.prefetch, 1),
-            batch_fn=batch_fn,
+            batch_fn=batch_fn, sem_cache=self.sem_cache,
         )
         # The main thread re-acquires the GIL every time a jit call returns
         # from (GIL-free) XLA execution; the default 5 ms switch interval
@@ -332,6 +368,14 @@ class NGDBTrainer:
         try:
             for _ in range(n_steps):
                 item = pf.next()
+                if item.sem_stage is not None:
+                    # The scheduler thread already did the store read +
+                    # device put (overlapped with step k); this is just the
+                    # donated scatter, enqueued after step k's program — the
+                    # in-order device stream makes eviction of step k's rows
+                    # safe even while k is still executing.
+                    self.params = self.sem_cache.apply_to(self.params,
+                                                          item.sem_stage)
                 fn = self._train_fn(item.prepared)
                 self.params, self.opt_state, loss, per_q = fn(
                     self.params, self.opt_state, item.steps, item.ans,
@@ -354,6 +398,10 @@ class NGDBTrainer:
         finally:
             _sys.setswitchinterval(old_switch)
             pf.close()
+            if self.sem_cache is not None:
+                # Drained queue items may hold planned-but-unapplied stages;
+                # drop residency metadata so future plans restage from disk.
+                self.sem_cache.reconcile()
         if self.ckpt:
             self.ckpt.maybe_save(
                 self.step, {"params": self.params, "opt": self.opt_state}, force=True
@@ -369,4 +417,9 @@ class NGDBTrainer:
             return False
         self.step, tree, _ = restored
         self.params, self.opt_state = tree["params"], tree["opt"]
+        if self.sem_cache is not None:
+            # Restored cache buffers don't match whatever residency metadata
+            # accumulated before resume; declare everything absent so the
+            # next plan restages from the store into the restored buffers.
+            self.sem_cache.reset()
         return True

@@ -18,7 +18,9 @@ class AdamConfig:
     eps: float = 1e-8
     weight_decay: float = 0.0
     clip_norm: float = 0.0     # 0 = off
-    frozen: Tuple[str, ...] = ("sem_table",)
+    # H_sem in either layout: full-resident table, or hot-set cache buffer +
+    # its int32 entity->slot indirection (semantic/store.py::SemanticCache).
+    frozen: Tuple[str, ...] = ("sem_table", "sem_cache", "sem_slot")
 
 
 def _is_frozen(path: Tuple, frozen: Tuple[str, ...]) -> bool:

@@ -1,0 +1,355 @@
+"""Out-of-core semantic store subsystem (DESIGN.md §SemanticStore):
+sharded mmap store, int8 layout, crash-safe opens, hot-set cache accounting,
+and end-to-end bit-identical training vs the full-resident path."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.semantic import (PTEConfig, SemanticCache, SemanticStore,
+                            SemanticStoreError, SemanticStoreWriter, StubPTE,
+                            dequantize_int8, precompute_semantic_table,
+                            precompute_semantic_table_to_store, quantize_int8)
+
+PTE_CFG = PTEConfig(d_l=16, n_layers=1, d_model=32, n_heads=2)
+
+
+@pytest.fixture(scope="module")
+def sem_table(tiny_kg):
+    return precompute_semantic_table(tiny_kg, StubPTE(PTE_CFG))
+
+
+# ---------------------------------------------------------------- quantizer
+def test_int8_roundtrip_error_bound(rng):
+    rows = rng.normal(size=(64, 32)).astype(np.float32)
+    rows[7] = 0.0  # zero row must not divide by zero
+    q, scale = quantize_int8(rows)
+    deq = dequantize_int8(q, scale)
+    assert q.dtype == np.int8 and scale.dtype == np.float32
+    # |x - deq| <= scale/2 per element, scale = max|row|/127.
+    bound = np.abs(rows).max(axis=1, keepdims=True) / 254.0 + 1e-7
+    assert (np.abs(rows - deq) <= bound).all()
+    assert (deq[7] == 0).all()
+
+
+# -------------------------------------------------------------------- store
+def test_streaming_store_bitwise_matches_in_memory(tiny_kg, sem_table, tmp_path):
+    """fp32 store precompute == in-memory precompute, bit for bit — with a
+    shard size that forces multiple shards and a ragged last shard."""
+    store = precompute_semantic_table_to_store(
+        tiny_kg, str(tmp_path), StubPTE(PTE_CFG), shard_rows=64)
+    assert store.n_rows == tiny_kg.n_entities and store.dim == PTE_CFG.d_l
+    assert len(store._shards) == 4  # 200 rows / 64 -> 3 full + 1 ragged
+    got = store.read_rows(np.arange(tiny_kg.n_entities))
+    np.testing.assert_array_equal(got, sem_table)
+    # scattered gather order is honored
+    ids = np.array([150, 3, 64, 63, 199, 0])
+    np.testing.assert_array_equal(store.read_rows(ids), sem_table[ids])
+    # staging file cleaned up, only shards + meta remain
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["meta.json"] + [f"shard_{i:05d}.bin" for i in range(4)]
+
+
+def test_int8_store_within_bound(tiny_kg, sem_table, tmp_path):
+    store = precompute_semantic_table_to_store(
+        tiny_kg, str(tmp_path), StubPTE(PTE_CFG), shard_rows=64, quant="int8")
+    got = store.read_rows(np.arange(tiny_kg.n_entities))
+    bound = np.abs(sem_table).max(axis=1, keepdims=True) / 254.0 + 1e-7
+    assert (np.abs(got - sem_table) <= bound).all()
+    assert store.disk_nbytes < tiny_kg.n_entities * PTE_CFG.d_l * 4 / 3
+
+
+def test_iter_shards_covers_all_rows(tiny_kg, sem_table, tmp_path):
+    store = precompute_semantic_table_to_store(
+        tiny_kg, str(tmp_path), StubPTE(PTE_CFG), shard_rows=64)
+    chunks = list(store.iter_shards())
+    assert [lo for lo, _ in chunks] == [0, 64, 128, 192]
+    np.testing.assert_array_equal(
+        np.concatenate([rows for _, rows in chunks]), sem_table)
+
+
+# ----------------------------------------------------------- crash safety
+def test_partial_store_rejected(tiny_kg, tmp_path):
+    d = str(tmp_path / "s")
+    precompute_semantic_table_to_store(tiny_kg, d, StubPTE(PTE_CFG),
+                                       shard_rows=64)
+    # 1) truncated shard (crash mid-write would never publish it, but bitrot
+    #    or manual copying can): open must refuse.
+    shard = os.path.join(d, "shard_00001.bin")
+    payload = open(shard, "rb").read()
+    with open(shard, "wb") as f:
+        f.write(payload[:-16])
+    with pytest.raises(SemanticStoreError, match="partial shard"):
+        SemanticStore(d)
+    with open(shard, "wb") as f:
+        f.write(payload)
+    SemanticStore(d)  # restored -> opens again
+    # 2) missing shard
+    os.remove(shard)
+    with pytest.raises(SemanticStoreError, match="missing shard"):
+        SemanticStore(d)
+
+
+def test_interrupted_precompute_leaves_no_openable_store(tmp_path):
+    """A writer that never finalized (crash before meta publish) must not
+    produce an openable store, even with complete-looking shard files."""
+    d = str(tmp_path / "crashed")
+    w = SemanticStoreWriter(d, dim=8, shard_rows=4)
+    w.append(np.ones((6, 8), dtype=np.float32))  # flushes one shard
+    assert os.path.exists(os.path.join(d, "shard_00000.bin"))
+    with pytest.raises(SemanticStoreError, match="missing meta"):
+        SemanticStore(d)
+
+
+def test_rebuild_invalidates_stale_store_first(tmp_path):
+    """Starting a writer over an existing store must invalidate it
+    immediately: a crash mid-rebuild leaves old meta + mixed shard files
+    with plausible byte counts, which open() would otherwise accept."""
+    d = str(tmp_path / "s")
+    w = SemanticStoreWriter(d, dim=8, shard_rows=4)
+    w.append(np.ones((8, 8), dtype=np.float32))
+    w.finalize()
+    SemanticStore(d)  # valid store on disk
+    # rebuild starts (e.g. different dataset), crashes after one shard
+    w2 = SemanticStoreWriter(d, dim=8, shard_rows=4)
+    w2.append(np.zeros((4, 8), dtype=np.float32))
+    with pytest.raises(SemanticStoreError, match="missing meta"):
+        SemanticStore(d)  # old meta gone -> mixed state is NOT openable
+
+
+def test_writer_rejects_bad_layouts(tmp_path):
+    with pytest.raises(SemanticStoreError, match="quant"):
+        SemanticStoreWriter(str(tmp_path), dim=8, quant="fp16")
+
+
+# -------------------------------------------------------------------- cache
+def test_cache_hit_miss_eviction_accounting(sem_table):
+    cache = SemanticCache(sem_table, budget_rows=8)
+    params = {"sem_cache": cache.buffer, "sem_slot": cache.slot_map}
+
+    stage = cache.plan(np.array([1, 2, 3, 1, 2]))  # dupes count once
+    assert (cache.hits, cache.misses, cache.evictions) == (0, 3, 0)
+    assert stage.n_rows == 3
+    params = cache.apply_to(params, stage)
+    assert cache.resident_rows == 3
+
+    assert cache.plan(np.array([1, 2, 3])) is None  # full hit -> no stage
+    assert cache.hits == 3
+
+    stage = cache.plan(np.arange(10, 17))  # 7 misses; budget 8 -> evictions
+    params = cache.apply_to(params, stage)
+    assert cache.misses == 10 and cache.evictions == 2
+    assert cache.resident_rows == 8
+
+    # residency is re-established after eviction, from the store
+    stage = cache.plan(np.array([1, 2]))
+    params = cache.apply_to(params, stage)
+    got = np.asarray(params["sem_cache"])[np.asarray(params["sem_slot"])[[1, 2]]]
+    np.testing.assert_array_equal(got, sem_table[[1, 2]])
+
+    s = cache.stats()
+    assert s["hit_rate"] == pytest.approx(s["hits"] / (s["hits"] + s["misses"]))
+    assert s["device_resident_sem_bytes"] == 8 * 16 * 4 + len(sem_table) * 4
+
+
+def test_cache_rejects_oversized_working_set(sem_table):
+    cache = SemanticCache(sem_table, budget_rows=4)
+    with pytest.raises(RuntimeError, match="budget"):
+        cache.plan(np.arange(5))
+
+
+def test_cache_never_evicts_current_batch(sem_table):
+    cache = SemanticCache(sem_table, budget_rows=4)
+    params = {"sem_cache": cache.buffer, "sem_slot": cache.slot_map}
+    for ids in ([0, 1, 2, 3], [4, 1, 5, 2], [6, 7, 8, 9]):
+        stage = cache.plan(np.array(ids))
+        if stage is not None:
+            params = cache.apply_to(params, stage)
+        got = np.asarray(params["sem_cache"])[np.asarray(params["sem_slot"])[ids]]
+        np.testing.assert_array_equal(got, sem_table[ids])
+
+
+def test_mmap_store_gather_equals_in_memory(tiny_kg, sem_table, tmp_path, rng):
+    """Cache backed by the mmap store serves the same bytes as the table."""
+    store = precompute_semantic_table_to_store(
+        tiny_kg, str(tmp_path), StubPTE(PTE_CFG), shard_rows=64)
+    cache = SemanticCache(store, budget_rows=32)
+    params = {"sem_cache": cache.buffer, "sem_slot": cache.slot_map}
+    for _ in range(5):
+        ids = rng.integers(0, tiny_kg.n_entities, size=20)
+        stage = cache.plan(ids)
+        if stage is not None:
+            params = cache.apply_to(params, stage)
+        got = np.asarray(params["sem_cache"])[np.asarray(params["sem_slot"])[ids]]
+        np.testing.assert_array_equal(got, sem_table[ids])
+    assert cache.evictions > 0  # budget actually exercised
+
+
+def test_stage_apply_out_of_order_rejected(sem_table):
+    cache = SemanticCache(sem_table, budget_rows=8)
+    params = {"sem_cache": cache.buffer, "sem_slot": cache.slot_map}
+    s1 = cache.plan(np.array([0, 1]))
+    s2 = cache.plan(np.array([2, 3]))
+    with pytest.raises(RuntimeError, match="out of order"):
+        cache.apply_to(params, s2)
+    params = cache.apply_to(params, s1)
+    cache.reconcile()  # s2 planned but dropped -> residency reset
+    assert cache.resident_rows == 0
+
+
+# -------------------------------------------------- end-to-end train parity
+def _fixed_batches(kg, n, batch):
+    from repro.sampling import OnlineSampler
+
+    sampler = OnlineSampler(kg, seed=5, patterns=("1p", "2p", "2i"))
+    return [sampler.sample_batch(batch) for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def tiny_store(tiny_kg, tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("semstore"))
+    return precompute_semantic_table_to_store(tiny_kg, d, StubPTE(PTE_CFG),
+                                              shard_rows=64)
+
+
+def _trainer(kg, table=None, cache=None, pipeline=False):
+    from repro.models import ModelConfig, make_model
+    from repro.training import AdamConfig, NGDBTrainer, TrainConfig
+
+    model = make_model("gqe", ModelConfig(dim=16, semantic_dim=PTE_CFG.d_l,
+                                          semantic_proj_dim=8))
+    cfg = TrainConfig(batch_size=8, n_negatives=4, b_max=64,
+                      prefetch=2 if pipeline else 0, pipeline=pipeline,
+                      patterns=("1p", "2p", "2i"), adam=AdamConfig(lr=1e-3))
+    return NGDBTrainer(model, kg, cfg, semantic_table=table,
+                       semantic_cache=cache)
+
+
+def test_out_of_core_training_bit_identical(tiny_kg, tiny_store, sem_table):
+    """The §4.4 proof at test scale: budget (96) << E (200), fp32 mode, sync
+    AND pipelined out-of-core runs match full-resident losses bit for bit
+    while the pipelined run stages every row from the prefetch thread."""
+    batches = _fixed_batches(tiny_kg, 6, 8)
+
+    tr_full = _trainer(tiny_kg, table=sem_table)
+    tr_full.train(6, log_every=0, batches=batches)
+    ref = [r["loss"] for r in tr_full.history]
+
+    cache = SemanticCache(tiny_store, budget_rows=96)
+    tr_sync = _trainer(tiny_kg, cache=cache)
+    tr_sync.train(6, log_every=0, batches=batches)
+    assert [r["loss"] for r in tr_sync.history] == ref
+
+    cache_p = SemanticCache(tiny_store, budget_rows=96)
+    tr_pipe = _trainer(tiny_kg, cache=cache_p, pipeline=True)
+    tr_pipe.train(6, log_every=0, batches=batches)
+    assert [r["loss"] for r in tr_pipe.history] == ref
+
+    # trained (non-semantic-buffer) params identical across all three
+    import jax
+
+    frozen = ("sem_table", "sem_cache", "sem_slot")
+    for other in (tr_sync, tr_pipe):
+        a = {k: v for k, v in tr_full.params.items() if k not in frozen}
+        b = {k: v for k, v in other.params.items() if k not in frozen}
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    # pipeline-integrated prefetch: all staging off the critical path
+    s = cache_p.stats()
+    assert s["stages_background"] == s["stages"] and s["sync_stages"] == 0
+    assert s["prefetch_overlap_frac"] == 1.0
+    # bounded device residency
+    full_bytes = tiny_kg.n_entities * PTE_CFG.d_l * 4
+    assert s["device_resident_sem_bytes"] < full_bytes
+
+
+def test_score_all_guard_and_chunked_parity(tiny_kg, tiny_store, sem_table):
+    """score_all refuses cache params; score_all_chunked streams the store
+    and matches the full-resident dense scorer."""
+    import jax
+
+    from repro.sampling import OnlineSampler
+
+    tr_full = _trainer(tiny_kg, table=sem_table)
+    cache = SemanticCache(tiny_store, budget_rows=96)
+    tr_ooc = _trainer(tiny_kg, cache=cache)
+
+    qs = [b.query for b in OnlineSampler(tiny_kg, seed=3).sample_batch(6)]
+    anchors = np.unique(np.concatenate([q.anchors for q in qs]))
+    stage = cache.plan(anchors)
+    if stage is not None:
+        tr_ooc.params = cache.apply_to(tr_ooc.params, stage)
+
+    states = tr_ooc.executor.encode(tr_ooc.params, qs)
+    with pytest.raises(RuntimeError, match="score_all_chunked"):
+        tr_ooc.model.score_all(tr_ooc.params, states)
+
+    states_full = tr_full.executor.encode(tr_full.params, qs)
+    np.testing.assert_array_equal(np.asarray(states), np.asarray(states_full))
+
+    dense = np.asarray(jax.jit(tr_full.model.score_all)(tr_full.params, states_full))
+    chunked = tr_ooc.model.score_all_chunked(tr_ooc.params, states,
+                                             tiny_store.read_rows, chunk=64)
+    np.testing.assert_allclose(chunked, dense[:, : tiny_kg.n_entities],
+                               rtol=0, atol=1e-6)
+
+
+def test_gather_fuse_kernel_from_cache(tiny_kg, tiny_store, sem_table, rng):
+    """The Pallas gather_fuse path gathers from the hot-set cache via the
+    slot indirection and matches both the cache-mode and full-resident
+    model fusion bit for bit."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    cache = SemanticCache(tiny_store, budget_rows=64)
+    tr_full = _trainer(tiny_kg, table=sem_table)
+    tr_ooc = _trainer(tiny_kg, cache=cache)
+
+    ids = rng.integers(0, tiny_kg.n_entities, size=16)
+    stage = cache.plan(ids)
+    if stage is not None:
+        tr_ooc.params = cache.apply_to(tr_ooc.params, stage)
+
+    kernel = ops.gather_fuse_params(tr_ooc.params, jnp.asarray(ids, jnp.int32),
+                                    interpret=True)
+    model_cache = tr_ooc.model.fused_entity_vec(tr_ooc.params, jnp.asarray(ids))
+    model_full = tr_full.model.fused_entity_vec(tr_full.params, jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(kernel), np.asarray(model_cache))
+    np.testing.assert_array_equal(np.asarray(kernel), np.asarray(model_full))
+
+
+# -------------------------------------------------------------- satellites
+def test_descriptions_vectorized_matches_reference(tiny_kg):
+    """The numpy-vectorized tokenizer must reproduce the seed's per-entity
+    Python loop exactly."""
+    from repro.semantic.pte import _DESC_LEN, _VOCAB
+
+    def reference(kg, ent_ids):
+        indptr, rels, tails = kg.relations_by_head
+        toks = np.zeros((len(ent_ids), _DESC_LEN), dtype=np.int32)
+        for i, e in enumerate(np.asarray(ent_ids)):
+            e = int(e)
+            row = [e % _VOCAB, (e * 2654435761) % _VOCAB]
+            lo, hi = indptr[e], indptr[e + 1]
+            for j in range(lo, min(hi, lo + (_DESC_LEN - 2) // 2)):
+                row.append(int(rels[j]) % _VOCAB)
+                row.append(int(tails[j]) % _VOCAB)
+            toks[i, : len(row)] = row[:_DESC_LEN]
+        return toks
+
+    ids = np.concatenate([np.arange(tiny_kg.n_entities), [0, 5, 5, 199]])
+    np.testing.assert_array_equal(StubPTE.descriptions(tiny_kg, ids),
+                                  reference(tiny_kg, ids))
+
+
+def test_serve_topk_matches_argsort(rng):
+    from repro.launch.serve import topk_desc
+
+    scores = rng.normal(size=(7, 300)).astype(np.float32)
+    ref = np.argsort(-scores, axis=1)[:, :10]
+    got = topk_desc(scores, 10)
+    np.testing.assert_array_equal(np.take_along_axis(scores, got, axis=1),
+                                  np.take_along_axis(scores, ref, axis=1))
+    assert topk_desc(scores, 1000).shape == (7, 300)
