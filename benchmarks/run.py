@@ -28,7 +28,11 @@ def main() -> None:
          semantic.run_store),
         ("adaptive", "Fig 9: adaptive sampling under shift", adaptive.run),
         ("freebase", "Table 2: single-hop completion runtime", runtime_freebase.run),
-        ("scaling", "Fig 7/Table 2: multi-device structural scaling", scaling.run),
+        # The scaling sweep also persists its summary (per-device param
+        # bytes, steps/s, retrace counts) to BENCH_scaling.json at the repo
+        # root, so the perf trajectory accumulates across PRs.
+        ("scaling", "Fig 7/Table 2: sharded-vs-single-device scaling sweep",
+         scaling.run),
         ("kernels", "Pallas kernel validation/micro", kernels_bench.run),
         ("pipeline", "Pipelined dataflow executor vs sync + compile cache",
          throughput.run_pipeline_compare),

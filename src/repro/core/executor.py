@@ -68,14 +68,25 @@ class PreparedBatch:
 
 
 class PooledExecutor:
-    """Operator-level batching engine (the paper's contribution 1)."""
+    """Operator-level batching engine (the paper's contribution 1).
+
+    ``ctx`` (``distributed.context.ExecutionContext``, default single-device)
+    is the placement policy: under a mesh context the traced programs pin the
+    workspace batch-sharded over the data axes with a sharding constraint, so
+    pool-step gathers/scatters partition instead of replicating. The encode
+    closure itself stays signature-keyed — one executor serves one context
+    for its lifetime, so the context never enters the cache key."""
 
     def __init__(self, model, b_max: int = 512, reuse_slots: bool = True,
-                 policy: str = "max_fillness", cache_size: int = 128):
+                 policy: str = "max_fillness", cache_size: int = 128,
+                 ctx=None):
+        from repro.distributed.context import ExecutionContext
+
         self.model = model
         self.b_max = b_max
         self.reuse_slots = reuse_slots
         self.policy = policy
+        self.ctx = ctx or ExecutionContext.single_device()
         self._sched_cache = CompileCache(cache_size, name="schedule")
         self._encode_cache = CompileCache(cache_size, name="encode")
 
@@ -138,10 +149,19 @@ class PooledExecutor:
             return fn
         model = self.model
         meta = prepared.meta
+        ctx = self.ctx
         n_ws = prepared.n_slots_padded + 1  # +1 trash row for padding scatters
+        if ctx.is_sharded:
+            # Round the workspace rows up to a multiple of the DP ways so the
+            # batch-sharding constraint below can actually bind ("data" must
+            # divide dim 0). Rows past the trash row are never gathered or
+            # scattered, so the numerics are untouched.
+            dp = ctx.dp_size
+            n_ws = ((n_ws + dp - 1) // dp) * dp
 
         def encode(params, steps, answer_slots):
-            ws = jnp.ones((n_ws, model.state_dim), dtype=jnp.float32)
+            ws = ctx.constrain_batch(
+                jnp.ones((n_ws, model.state_dim), dtype=jnp.float32))
             for (op, card, pn), arr in zip(meta, steps):
                 op = OpType(op)
                 if op == OpType.EMBED:
@@ -176,11 +196,32 @@ class QueryLevelExecutor:
     """The baseline the paper beats: batching restricted to isomorphic query
     groups (KGReasoning/SQE-style). Each pattern group executes as its own
     fragmented sequence of kernels, so a mixed batch of |T| patterns issues
-    ~|T|x more, ~|T|x smaller kernels."""
+    ~|T|x more, ~|T|x smaller kernels.
 
-    def __init__(self, model, b_max: int = 512):
+    Exposes the same ``prepare`` / ``encode_fn`` / ``cache_stats`` surface as
+    ``PooledExecutor`` (delegated to the inner engine), so callers like the
+    trainer never reach into ``_inner`` or mutate attributes to mark the
+    query-level mode — the per-pattern-group fragmentation lives entirely in
+    ``encode`` / the trainer's query-level step, not in the interface."""
+
+    def __init__(self, model, b_max: int = 512, ctx=None):
         self.model = model
-        self._inner = PooledExecutor(model, b_max=b_max, reuse_slots=True, policy="fifo")
+        self._inner = PooledExecutor(model, b_max=b_max, reuse_slots=True,
+                                     policy="fifo", ctx=ctx)
+
+    @property
+    def ctx(self):
+        return self._inner.ctx
+
+    def prepare(self, queries: Sequence[QueryInstance]) -> PreparedBatch:
+        """Schedule one (single-pattern) group — callers group first."""
+        return self._inner.prepare(queries)
+
+    def encode_fn(self, prepared: PreparedBatch):
+        return self._inner.encode_fn(prepared)
+
+    def cache_stats(self) -> Dict[str, Dict[str, float]]:
+        return self._inner.cache_stats()
 
     def prepare_groups(self, queries: Sequence[QueryInstance]):
         groups: Dict[str, List[QueryInstance]] = {}

@@ -128,7 +128,8 @@ def batch_entity_ids(queries, pos: np.ndarray, neg: np.ndarray) -> np.ndarray:
 
 
 def prepare_work_item(sampler, executor, batch, n_negatives: int,
-                      dev_static=None, sem_cache=None) -> "PreparedWorkItem":
+                      dev_static=None, sem_cache=None,
+                      ctx=None) -> "PreparedWorkItem":
     """Run the full host side of one training step: negative-sampling arrays,
     canonicalization + Algorithm-1 scheduling, and device transfer.
 
@@ -146,8 +147,19 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
     read from the on-disk store, dequantized and device-put while the
     previous batch executes — the returned ``sem_stage`` is applied by the
     main thread right before this batch dispatches, so steady-state training
-    never does a synchronous mid-step store read."""
+    never does a synchronous mid-step store read.
+
+    ``ctx`` (an ``ExecutionContext``) makes every device put here
+    sharding-aware: batch-like arrays go straight into the batch shardings
+    the fused step was compiled against (``ctx.put_batch``), so the transfer
+    happens once, on this thread, and dispatch does zero resharding. When
+    omitted (or single-device) the puts are plain ``jnp.asarray`` —
+    bit-for-bit the historical path."""
     import jax.numpy as jnp  # deferred: keep module import light
+
+    put = jnp.asarray
+    if ctx is not None and ctx.is_sharded:
+        put = ctx.put_batch
 
     queries, pos, neg = sampler.to_training_arrays(batch, n_negatives)
     sem_stage = None
@@ -159,23 +171,23 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
               if dev_static is not None else None)
     if static is None:
         static = (
-            [{k: jnp.asarray(v) for k, v in s.items()}
+            [{k: put(v) for k, v in s.items()}
              for s in prepared.slot_arrays],
-            jnp.asarray(prepared.answer_slots),
+            put(prepared.answer_slots),
         )
         if dev_static is not None:
             dev_static.put(prepared.structure_key, static)
     slot_dev, ans = static
     steps = [
-        {**s, **{k: jnp.asarray(v) for k, v in b.items()}}
+        {**s, **{k: put(v) for k, v in b.items()}}
         for s, b in zip(slot_dev, prepared.bind_arrays)
     ]
     return PreparedWorkItem(
         prepared=prepared,
         steps=steps,
         ans=ans,
-        pos=jnp.asarray(pos[prepared.order]),
-        neg=jnp.asarray(neg[prepared.order]),
+        pos=put(pos[prepared.order]),
+        neg=put(neg[prepared.order]),
         patterns=prepared.patterns,
         n_queries=len(queries),
         sem_stage=sem_stage,
@@ -232,11 +244,13 @@ class PreparedBatchPrefetcher:
         workers: int = 2,
         batch_fn: Optional[Callable[[], List[SampledQuery]]] = None,
         sem_cache=None,
+        ctx=None,
     ):
         self.sampler = sampler
         self.executor = executor
         self.n_negatives = n_negatives
         self.sem_cache = sem_cache
+        self.ctx = ctx
         self._q: "queue.Queue[PreparedWorkItem]" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
@@ -262,7 +276,8 @@ class PreparedBatchPrefetcher:
                 batch = self._next_batch()
                 item = prepare_work_item(self.sampler, self.executor, batch,
                                          self.n_negatives, self._dev_static,
-                                         sem_cache=self.sem_cache)
+                                         sem_cache=self.sem_cache,
+                                         ctx=self.ctx)
             except BaseException as e:  # surface on the consumer side
                 if self._error is None:
                     self._error = e

@@ -1,3 +1,8 @@
+from repro.distributed.context import (
+    ExecutionContext,
+    make_execution_context,
+    parse_mesh_spec,
+)
 from repro.distributed.pipeline_parallel import bubble_fraction, gpipe_forward
 from repro.distributed.sharding import (
     batch_shardings,
@@ -8,6 +13,9 @@ from repro.distributed.sharding import (
 )
 
 __all__ = [
+    "ExecutionContext",
+    "make_execution_context",
+    "parse_mesh_spec",
     "param_spec",
     "tree_param_shardings",
     "batch_shardings",

@@ -1,0 +1,234 @@
+"""Explicit device-placement context threaded through the NGDB engine.
+
+Before this module, placement was an implicit global: everything materialized
+on ``jax.devices()[0]`` and the mesh machinery in ``sharding.py`` was only
+wired into the LM zoo side. ``ExecutionContext`` makes placement a value that
+flows models → executor → trainer → launch (DESIGN.md §Sharding):
+
+* ``single_device()`` — the default everywhere; every helper degrades to a
+  no-op / plain ``jnp.asarray`` so the single-device path is bit-for-bit the
+  pre-context behavior (no mesh is ever constructed, no sharding attached).
+* a mesh context — carries the mesh plus the *policy* for mapping names and
+  shapes to ``NamedSharding``s: parameters (and Adam moments) through
+  ``tree_param_shardings`` under the chosen profile (``"2d"`` TP×FSDP or
+  ``"fsdp"`` ZeRO-3), batch-like arrays over the data-parallel axes via the
+  same divisibility-aware ``_fit`` the rule table uses (an indivisible
+  leading dim silently replicates instead of erroring), and the donation
+  policy for the fused train step.
+
+The context never forces a layout XLA must undo: ``batch_sharding`` /
+``param_sharding`` are exactly the shardings the trainer passes to
+``jax.jit(in_shardings=...)``, so arrays staged by the pipeline's scheduler
+thread (``data/pipeline.py::prepare_work_item``) land where the step program
+expects them and dispatch does zero resharding copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    batch_shardings,
+    batch_spec,
+    dp_axes,
+    fsdp_param_spec,
+    param_spec,
+    tree_param_shardings,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionContext:
+    """Placement policy for one training/serving run.
+
+    ``mesh is None`` means single-device: all helpers return ``None`` (for
+    shardings) or pass values through untouched, preserving the historical
+    behavior exactly. ``donate_params`` is the donation policy for the fused
+    train step: donate (params, opt_state) into each dispatch so the update
+    is in-place in HBM. It exists as policy (rather than a hard-coded tuple)
+    because a caller that aliases ``trainer.params`` across steps — e.g. an
+    eval thread scoring a snapshot — must be able to turn donation off
+    without editing the trainer.
+    """
+
+    mesh: Optional[Mesh] = None
+    profile: str = "2d"        # "2d" (TP x FSDP) | "fsdp" (ZeRO-3, no TP)
+    moe_mode: str = "tp"
+    donate_params: bool = True
+
+    # ------------------------------------------------------------- factories
+    @classmethod
+    def single_device(cls) -> "ExecutionContext":
+        """Today's behavior, bit-for-bit: no mesh, no shardings, plain puts."""
+        return cls(mesh=None)
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, profile: str = "2d",
+                  **kw) -> "ExecutionContext":
+        if profile not in ("2d", "fsdp"):
+            raise ValueError(f"profile must be 2d|fsdp, got {profile!r}")
+        return cls(mesh=mesh, profile=profile, **kw)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.size if self.mesh is not None else 1
+
+    @property
+    def dp_size(self) -> int:
+        """Total data-parallel ways (product of the batch axes)."""
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a]
+                            for a in dp_axes(self.mesh, self.profile)]))
+
+    def describe(self) -> str:
+        if self.mesh is None:
+            return "single-device"
+        axes = ", ".join(f"{a}={self.mesh.shape[a]}" for a in self.mesh.axis_names)
+        return f"mesh({axes}) profile={self.profile}"
+
+    # -------------------------------------------------------------- shardings
+    def replicated(self) -> Optional[NamedSharding]:
+        return NamedSharding(self.mesh, P()) if self.mesh is not None else None
+
+    def param_sharding(self, name: str,
+                       shape: Tuple[int, ...]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        if self.profile == "fsdp":
+            spec = fsdp_param_spec(name, tuple(shape), self.mesh)
+        else:
+            spec = param_spec(name, tuple(shape), self.mesh, self.moe_mode)
+        return NamedSharding(self.mesh, spec)
+
+    def param_shardings(self, tree):
+        """Pytree of NamedShardings for params or Adam state (or None)."""
+        if self.mesh is None:
+            return None
+        return tree_param_shardings(tree, self.mesh, self.moe_mode, self.profile)
+
+    def batch_sharding(self, shape: Tuple[int, ...]) -> Optional[NamedSharding]:
+        """Leading (batch) dim over the DP axes where divisible, else
+        replicate — ``sharding.batch_spec``, the same leaf rule the fused
+        step's ``in_shardings`` are built from."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh,
+                             batch_spec(shape, self.mesh, self.profile))
+
+    def batch_shardings(self, tree):
+        if self.mesh is None:
+            return None
+        return batch_shardings(tree, self.mesh, self.profile)
+
+    # ------------------------------------------------------------- placement
+    def put_param(self, name: str, value):
+        """Materialize a parameter/table into its NamedSharding (single
+        host->devices transfer); plain ``jnp.asarray`` when single-device."""
+        import jax.numpy as jnp
+
+        if self.mesh is None:
+            return jnp.asarray(value)
+        return jax.device_put(value, self.param_sharding(name, np.shape(value)))
+
+    def put_batch(self, value):
+        """Device-put a batch-like array, batch-sharded over the DP axes."""
+        import jax.numpy as jnp
+
+        if self.mesh is None:
+            return jnp.asarray(value)
+        return jax.device_put(value, self.batch_sharding(np.shape(value)))
+
+    def put_replicated(self, value):
+        import jax.numpy as jnp
+
+        if self.mesh is None:
+            return jnp.asarray(value)
+        return jax.device_put(value, self.replicated())
+
+    def constrain_batch(self, x):
+        """Inside-jit ``with_sharding_constraint`` pinning the batch layout
+        (e.g. the executor workspace). No-op single-device, and no-op when
+        the leading dim does not divide the DP axes (constraining to
+        replicated would *forbid* XLA from sharding it)."""
+        if self.mesh is None:
+            return x
+        sh = self.batch_sharding(x.shape)
+        if sh.spec[0] is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    def donate_argnums(self, *argnums: int) -> Tuple[int, ...]:
+        return tuple(argnums) if self.donate_params else ()
+
+
+# --------------------------------------------------------------------------
+# Mesh-spec parsing (the launch surface: ``--mesh data=N[,model=M]``)
+# --------------------------------------------------------------------------
+
+_KNOWN_AXES = ("pod", "data", "model")
+
+
+def parse_mesh_spec(spec: str) -> Dict[str, int]:
+    """``"data=8"`` / ``"data=4,model=2"`` -> {"data": 4, "model": 2}.
+
+    Axis names are restricted to the rule table's vocabulary so a typo fails
+    here, not as a silently-replicated parameter."""
+    out: Dict[str, int] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, eq, size = part.partition("=")
+        name = name.strip()
+        if not eq or name not in _KNOWN_AXES:
+            raise ValueError(
+                f"bad mesh spec {spec!r}: expected comma-separated "
+                f"axis=size with axes from {_KNOWN_AXES}, got {part!r}")
+        try:
+            n = int(size)
+        except ValueError:
+            raise ValueError(f"bad mesh spec {spec!r}: size {size!r} is not "
+                             f"an integer") from None
+        if n < 1:
+            raise ValueError(f"bad mesh spec {spec!r}: {name}={n} must be >= 1")
+        if name in out:
+            raise ValueError(f"bad mesh spec {spec!r}: duplicate axis {name!r}")
+        out[name] = n
+    if "data" not in out:
+        raise ValueError(f"bad mesh spec {spec!r}: a 'data' axis is required")
+    out.setdefault("model", 1)  # rule table assumes both axes exist
+    return out
+
+
+def make_execution_context(mesh_spec: Optional[str] = None,
+                           profile: str = "2d",
+                           devices=None,
+                           **kw) -> ExecutionContext:
+    """Build an ExecutionContext from a ``--mesh`` spec (None = single
+    device). Uses the first ``prod(sizes)`` visible devices, so a sweep can
+    build 1/2/4/8-device contexts inside one emulated-host process."""
+    if mesh_spec is None:
+        return ExecutionContext.single_device()
+    sizes = parse_mesh_spec(mesh_spec)
+    axes = tuple(a for a in _KNOWN_AXES if a in sizes)
+    shape = tuple(sizes[a] for a in axes)
+    need = int(np.prod(shape))
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if need > len(devices):
+        raise ValueError(
+            f"mesh {mesh_spec!r} needs {need} devices but only "
+            f"{len(devices)} visible; shrink the mesh or emulate more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    mesh = Mesh(np.asarray(devices[:need]).reshape(shape), axes)
+    return ExecutionContext.from_mesh(mesh, profile=profile, **kw)

@@ -105,6 +105,11 @@ def fsdp_param_spec(name: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
     ("data","model") axes, and the batch spreads over all devices. The right
     profile for small-to-mid dense models where TP collectives dominate
     (§Perf iteration: a 4B model on a 16-wide TP axis is collective-bound)."""
+    if name in ("sem_cache", "sem_slot"):
+        # Hot-set cache + indirection stay replicated in EVERY profile: the
+        # plan/apply staging scatter must remain collective-free, and the
+        # buffers are already bounded by the row budget (not by E).
+        return P()
     if not shape or int(np.prod(shape)) < (1 << 16):
         return P()  # norms/biases: replicate
     spec = [None] * len(shape)
@@ -145,18 +150,24 @@ def dp_axes(mesh: Mesh, profile: str = "2d") -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh, profile: str = "2d") -> P:
+    """THE batch leaf rule: dim 0 over the DP axes where divisible, else
+    replicate. Single source of truth — ``ExecutionContext.batch_sharding``
+    (what the pipeline's scheduler thread puts arrays with) and
+    ``batch_shardings`` (what the fused step compiles ``in_shardings`` from)
+    must agree byte-for-byte or every dispatch reshards."""
+    shape = tuple(shape)
+    if not shape:
+        return P()
+    b_axis = _fit(shape[0], dp_axes(mesh, profile), mesh)
+    return P(*([b_axis] + [None] * (len(shape) - 1)))
+
+
 def batch_shardings(batch_tree, mesh: Mesh, profile: str = "2d"):
     """Inputs: shard dim 0 (batch) over DP axes where divisible."""
-    dp = dp_axes(mesh, profile)
-
-    def leaf(spec_leaf):
-        shape = spec_leaf.shape
-        if len(shape) == 0:
-            return NamedSharding(mesh, P())
-        b_axis = _fit(shape[0], dp, mesh)
-        return NamedSharding(mesh, P(*([b_axis] + [None] * (len(shape) - 1))))
-
-    return jax.tree.map(leaf, batch_tree)
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf.shape, mesh, profile)),
+        batch_tree)
 
 
 def cache_shardings(cache_tree, mesh: Mesh):

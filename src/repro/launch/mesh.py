@@ -18,5 +18,10 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model_parallel: int = 1):
     """Whatever devices are actually alive (elastic restores, examples)."""
     n = len(jax.devices())
-    assert n % model_parallel == 0
+    if model_parallel < 1 or n % model_parallel != 0:
+        raise ValueError(
+            f"cannot build a host mesh: {n} visible device(s) not divisible "
+            f"by model_parallel={model_parallel}; pass a divisor of {n} "
+            f"(e.g. model_parallel=1), or emulate more host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
     return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

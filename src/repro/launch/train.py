@@ -24,6 +24,7 @@ import time
 import numpy as np
 
 from repro.data import load_dataset
+from repro.distributed.context import make_execution_context
 from repro.models import ModelConfig, make_model, model_names
 from repro.sampling import OnlineSampler
 from repro.semantic import (PTEConfig, SemanticCache, SemanticStore,
@@ -90,12 +91,31 @@ def main() -> None:
                          "on the scheduler thread (zero mid-step store reads)")
     ap.add_argument("--max-inflight", type=int, default=2,
                     help="pipelined dispatch window (2 = double-buffered)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="mesh-shard the run: data=N[,model=M] (DESIGN.md "
+                         "§Sharding). Tables/Adam state materialize into "
+                         "their NamedShardings and the fused step compiles "
+                         "with explicit in/out shardings; omit for the "
+                         "single-device default. On a CPU host emulate "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--profile", default="2d", choices=["2d", "fsdp"],
+                    help="sharding profile for --mesh: 2d = TP x FSDP rule "
+                         "table; fsdp = ZeRO-3 (every large table/param "
+                         "shards its largest divisible dim over all devices "
+                         "— the profile that splits the entity table 1/N "
+                         "on a pure data mesh)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-queries", type=int, default=64)
     ap.add_argument("--log-every", type=int, default=20)
     args = ap.parse_args()
     if args.semantic_store:
         args.semantic = True
+
+    ctx = make_execution_context(args.mesh, profile=args.profile)
+    if ctx.is_sharded:
+        print(f"execution context: {ctx.describe()} "
+              f"({ctx.n_devices} devices, dp={ctx.dp_size})")
 
     kg, full_kg, stats = load_dataset(args.dataset)
     print(f"dataset={args.dataset} (reduced stand-in): "
@@ -111,7 +131,7 @@ def main() -> None:
         per_batch = args.batch_size * (4 + args.negatives)
         budget = args.semantic_budget_rows or min(kg.n_entities, 4 * per_batch)
         budget = max(budget, min(kg.n_entities, per_batch))
-        cache = SemanticCache(store, budget_rows=budget)
+        cache = SemanticCache(store, budget_rows=budget, ctx=ctx)
         print(f"semantic cache: {budget} device rows "
               f"({cache.device_resident_sem_bytes/1e6:.2f} MB device-resident "
               f"vs {kg.n_entities * sem_dim * 4/1e6:.2f} MB full-resident)")
@@ -122,8 +142,12 @@ def main() -> None:
         sem_dim = args.semantic_dim
         print(f"semantic precompute: {table.shape} in {time.time()-t0:.1f}s; PTE unloaded")
 
+    # Pad entity rows to a multiple of the mesh size so the tables divide
+    # whichever axis the profile assigns them (§Perf: indivisible rows make
+    # the rule table silently replicate the biggest buffer in the run).
     model = make_model(args.model, ModelConfig(dim=args.dim, gamma=12.0,
-                                               semantic_dim=sem_dim))
+                                               semantic_dim=sem_dim,
+                                               entity_pad=max(1, ctx.n_devices)))
     cfg = TrainConfig(
         batch_size=args.batch_size, n_negatives=args.negatives,
         adam=AdamConfig(lr=args.lr), adaptive=args.adaptive,
@@ -131,7 +155,7 @@ def main() -> None:
         pipeline=args.pipeline, max_inflight=args.max_inflight,
     )
     trainer = NGDBTrainer(model, kg, cfg, semantic_table=table,
-                          semantic_cache=cache)
+                          semantic_cache=cache, ctx=ctx)
     if trainer.resume():
         print(f"resumed from checkpoint at step {trainer.step}")
 
@@ -148,6 +172,12 @@ def main() -> None:
     print(f"trained {args.steps} steps [{mode}] in {dt:.1f}s ({qps:.0f} queries/sec)")
     print(f"compile cache: {cc['size']} programs, "
           f"hit rate {cc['hit_rate']:.2%} ({cc['misses']} traces)")
+    if ctx.is_sharded:
+        ent = trainer.params["entity"]
+        per_dev = ent.addressable_shards[0].data.nbytes
+        print(f"entity table: {ent.nbytes/1e6:.2f} MB logical, "
+              f"{per_dev/1e6:.2f} MB/device "
+              f"({ent.sharding.spec} over {ctx.describe()})")
     if cache is not None:
         cs = cache.stats()
         print(f"semantic cache: hit rate {cs['hit_rate']:.2%}, "

@@ -397,7 +397,7 @@ class SemanticCache:
     """
 
     def __init__(self, store, budget_rows: int, n_rows: Optional[int] = None,
-                 name: str = "sem_cache"):
+                 name: str = "sem_cache", ctx=None):
         import jax.numpy as jnp
 
         if isinstance(store, np.ndarray):
@@ -409,10 +409,19 @@ class SemanticCache:
         self.n_rows = int(n_rows if n_rows is not None else store.n_rows)
         self.dim = int(store.dim)
         self.name = name
+        # Placement context: under a mesh the cache buffers (and every staged
+        # row batch) are REPLICATED across the mesh — the budget bounds them,
+        # and replication keeps the plan/apply scatter collective-free (the
+        # sharding rule tables pin sem_cache/sem_slot replicated to match).
+        self._ctx = ctx
+        self._sharded = ctx is not None and getattr(ctx, "is_sharded", False)
         # Device state (handed to init_params; thereafter threaded through
         # the donated params dict — the cache never reuses these handles).
         self.buffer = jnp.zeros((self.budget_rows, self.dim), dtype=jnp.float32)
         self.slot_map = jnp.zeros((self.n_rows,), dtype=jnp.int32)
+        if self._sharded:
+            self.buffer = ctx.put_replicated(self.buffer)
+            self.slot_map = ctx.put_replicated(self.slot_map)
         # Host metadata (source of truth for residency).
         self._slot_of = np.full(self.n_rows, -1, dtype=np.int32)
         self._owner = np.full(self.budget_rows, -1, dtype=np.int64)
@@ -498,11 +507,15 @@ class SemanticCache:
             slots = np.concatenate([slots, np.full(mp - m, slots[-1], np.int32)])
             missing = np.concatenate([missing, np.full(mp - m, missing[-1])])
             rows = np.concatenate([rows, np.repeat(rows[-1:], mp - m, axis=0)])
+        # Under a mesh context, stage replicated onto the mesh so the donated
+        # scatter matches the (replicated) cache buffers — still one logical
+        # host->device transfer either way.
+        put = self._ctx.put_replicated if self._sharded else jnp.asarray
         return SemStage(
             seq=seq,
-            slots=jnp.asarray(slots, dtype=jnp.int32),
-            ids=jnp.asarray(missing, dtype=jnp.int32),
-            rows=jnp.asarray(rows),  # the single device put
+            slots=put(slots.astype(np.int32)),
+            ids=put(missing.astype(np.int32)),
+            rows=put(rows),  # the single device put
             n_rows=m,
             background=background,
         )

@@ -61,16 +61,24 @@ class TrainConfig:
 
 class NGDBTrainer:
     def __init__(self, model, kg, cfg: TrainConfig, semantic_table=None,
-                 semantic_cache=None):
+                 semantic_cache=None, ctx=None):
+        from repro.distributed.context import ExecutionContext
+
         self.model = model
         self.kg = kg
         self.cfg = cfg
+        # Placement policy (DESIGN.md §Sharding): params/Adam state live in
+        # their NamedShardings, batches shard over the data axes, and the
+        # fused step compiles with explicit in/out shardings. The default
+        # single-device context makes every placement hook a no-op.
+        self.ctx = ctx or ExecutionContext.single_device()
         if cfg.executor == "pooled":
             self.executor = PooledExecutor(model, b_max=cfg.b_max,
-                                           cache_size=cfg.compile_cache_size)
+                                           cache_size=cfg.compile_cache_size,
+                                           ctx=self.ctx)
         else:
-            self.executor = QueryLevelExecutor(model, b_max=cfg.b_max)
-            self.executor.encode_fn = None  # query-level path handled eagerly
+            self.executor = QueryLevelExecutor(model, b_max=cfg.b_max,
+                                               ctx=self.ctx)
         # Out-of-core semantic mode (semantic/store.py): the params carry a
         # bounded device hot set + indirection instead of the full H_sem;
         # every batch's rows are staged (plan/apply_to) before dispatch.
@@ -78,9 +86,12 @@ class NGDBTrainer:
         key = jax.random.PRNGKey(cfg.seed)
         self.params = model.init_params(
             key, kg.n_entities, kg.n_relations, semantic_table=semantic_table,
-            semantic_cache=semantic_cache,
+            semantic_cache=semantic_cache, ctx=self.ctx,
         )
-        self.opt_state = adam_init(self.params)
+        self.opt_state = adam_init(self.params, cfg.adam, ctx=self.ctx)
+        # Shardings the fused step is compiled against (None single-device).
+        self._param_sh = self.ctx.param_shardings(self.params)
+        self._opt_sh = self.ctx.param_shardings(self.opt_state)
         self.sampler = OnlineSampler(kg, patterns=cfg.patterns, seed=cfg.seed)
         self.adaptive = AdaptiveDistribution(cfg.patterns) if cfg.adaptive else None
         self.ckpt = (
@@ -104,7 +115,13 @@ class NGDBTrainer:
         frozen = {k: v for k, v in params.items() if k in frozen_names}
         return trainable, frozen
 
-    def _train_fn(self, prepared: PreparedBatch):
+    def _train_fn(self, prepared: PreparedBatch, example=None):
+        """Jitted fused step for ``prepared``'s signature. ``example`` is the
+        (steps, ans, pos, neg) the step will be called with — under a mesh
+        context their SHAPES pick the batch in_shardings, so the program is
+        compiled against exactly the layout the pipeline stages arrays into
+        (signature-keyed cache: same signature ⇒ same bucketed shapes ⇒ same
+        shardings, so the example never fragments the cache)."""
         sig = prepared.signature
         fn = self._train_fns.get(sig)
         if fn is not None:
@@ -127,15 +144,30 @@ class NGDBTrainer:
             params, opt_state = adam_update(grads, opt_state, params, cfg.adam)
             return params, opt_state, loss, per_q
 
-        fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        jit_kwargs = {}
+        if self.ctx.is_sharded and example is not None:
+            steps, ans, pos, neg = example
+            rep = self.ctx.replicated()
+            jit_kwargs = dict(
+                # params + Adam state per tree_param_shardings; batch arrays
+                # over the data axes; loss and per-query aux replicated (both
+                # are read back on the host every retire).
+                in_shardings=(self._param_sh, self._opt_sh,
+                              self.ctx.batch_shardings(steps),
+                              self.ctx.batch_sharding(np.shape(ans)),
+                              self.ctx.batch_sharding(np.shape(pos)),
+                              self.ctx.batch_sharding(np.shape(neg))),
+                out_shardings=(self._param_sh, self._opt_sh, rep, rep),
+            )
+        fn = jax.jit(step_fn, donate_argnums=self.ctx.donate_argnums(0, 1),
+                     **jit_kwargs)
         self._train_fns.put(sig, fn)
         return fn
 
     def compile_cache_stats(self) -> Dict[str, Dict[str, float]]:
         """Counters for every signature-keyed cache in the engine."""
         out = {"train_step": self._train_fns.stats()}
-        ex = self.executor if isinstance(self.executor, PooledExecutor) else self.executor._inner
-        out.update(ex.cache_stats())
+        out.update(self.executor.cache_stats())
         if self.sem_cache is not None:
             out["sem_cache"] = self.sem_cache.stats()
         return out
@@ -157,10 +189,14 @@ class NGDBTrainer:
             prepared = self.executor.prepare(queries)
             pos = pos[prepared.order]
             neg = neg[prepared.order]
-            fn = self._train_fn(prepared)
             steps, ans = prepared.device_args()
+            fn = self._train_fn(prepared, example=(steps, ans, pos, neg))
+            # pos/neg go in as host numpy: the jit places them per its
+            # in_shardings (one transfer straight into the compiled layout);
+            # a jnp.asarray here would commit to device 0 first and force a
+            # second reshard transfer at dispatch under a mesh ctx.
             self.params, self.opt_state, loss, per_q = fn(
-                self.params, self.opt_state, steps, ans, jnp.asarray(pos), jnp.asarray(neg)
+                self.params, self.opt_state, steps, ans, pos, neg
             )
             patterns = prepared.patterns
         else:  # query-level baseline: one fragmented pass per pattern group
@@ -190,7 +226,7 @@ class NGDBTrainer:
         fn = self._train_fns.get(sig)
         if fn is not None:
             return fn
-        encode = self.executor._inner.encode_fn(prepared)
+        encode = self.executor.encode_fn(prepared)
         model = self.model
 
         def gfn(params, steps, ans, pos, neg):
@@ -211,7 +247,6 @@ class NGDBTrainer:
 
     def _query_level_step(self, queries, pos, neg):
         """Baseline: independent fragmented train micro-steps per pattern."""
-        inner: PooledExecutor = self.executor._inner
         if not hasattr(self, "_adam_jit"):
             cfg = self.cfg.adam
             self._adam_jit = jax.jit(
@@ -224,7 +259,7 @@ class NGDBTrainer:
         grads_acc = None
         for pat, idxs in groups.items():
             sub = [queries[i] for i in idxs]
-            prepared = inner.prepare(sub)
+            prepared = self.executor.prepare(sub)
             fn = self._qlevel_grad_fn(prepared)
             steps, ans = prepared.device_args()
             loss, per_q, grads = fn(self.params, steps, ans,
@@ -351,7 +386,7 @@ class NGDBTrainer:
         pf = PreparedBatchPrefetcher(
             self.sampler, self.executor, self.cfg.batch_size,
             self.cfg.n_negatives, depth=max(self.cfg.prefetch, 1),
-            batch_fn=batch_fn, sem_cache=self.sem_cache,
+            batch_fn=batch_fn, sem_cache=self.sem_cache, ctx=self.ctx,
         )
         # The main thread re-acquires the GIL every time a jit call returns
         # from (GIL-free) XLA execution; the default 5 ms switch interval
@@ -376,7 +411,9 @@ class NGDBTrainer:
                     # safe even while k is still executing.
                     self.params = self.sem_cache.apply_to(self.params,
                                                           item.sem_stage)
-                fn = self._train_fn(item.prepared)
+                fn = self._train_fn(item.prepared,
+                                    example=(item.steps, item.ans,
+                                             item.pos, item.neg))
                 self.params, self.opt_state, loss, per_q = fn(
                     self.params, self.opt_state, item.steps, item.ans,
                     item.pos, item.neg,
@@ -412,7 +449,15 @@ class NGDBTrainer:
     def resume(self) -> bool:
         if not self.ckpt:
             return False
-        restored = self.ckpt.restore(template={"params": self.params, "opt": self.opt_state})
+        # Checkpoints store arrays UNSHARDED (host numpy); passing the
+        # context's shardings reshards them onto whatever mesh THIS run has —
+        # save on 8 devices, restore on 4 (mesh-shape-agnostic restore).
+        shardings = None
+        if self.ctx.is_sharded:
+            shardings = {"params": self._param_sh, "opt": self._opt_sh}
+        restored = self.ckpt.restore(
+            template={"params": self.params, "opt": self.opt_state},
+            shardings=shardings)
         if restored is None:
             return False
         self.step, tree, _ = restored

@@ -28,21 +28,30 @@ def _is_frozen(path: Tuple, frozen: Tuple[str, ...]) -> bool:
     return any(str(n) in frozen for n in names)
 
 
-def adam_init(params, cfg: AdamConfig = AdamConfig()):
+def adam_init(params, cfg: AdamConfig = AdamConfig(), ctx=None):
     """Frozen buffers (e.g. the H_sem table) get token-sized moment slots:
     they receive no updates, so real m/v would be pure HBM waste (§Perf
-    iteration N2 — 2x the H_sem bytes on every device)."""
+    iteration N2 — 2x the H_sem bytes on every device).
+
+    ``ctx`` (an ``ExecutionContext``) places the moments per
+    ``tree_param_shardings`` — the same rule table as the params they mirror,
+    so under FSDP the Adam state scales 1/N with the tables. ``zeros_like``
+    of a sharded param already inherits its sharding; the explicit put makes
+    the layout an invariant rather than an inference."""
 
     def zeros(path, p):
         if _is_frozen(path, cfg.frozen):
             return jnp.zeros((1,), p.dtype)
         return jnp.zeros_like(p)
 
-    return {
+    state = {
         "m": jax.tree_util.tree_map_with_path(zeros, params),
         "v": jax.tree_util.tree_map_with_path(zeros, params),
         "step": jnp.zeros((), dtype=jnp.int32),
     }
+    if ctx is not None and ctx.is_sharded:
+        state = jax.device_put(state, ctx.param_shardings(state))
+    return state
 
 
 def global_norm(tree) -> jnp.ndarray:

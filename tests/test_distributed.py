@@ -103,6 +103,88 @@ def test_compressed_psum_single_axis():
     assert float(jnp.abs(new_err).max()) < float(jnp.abs(g).max()) / 64
 
 
+def test_make_host_mesh_divisible():
+    from repro.launch.mesh import make_host_mesh
+
+    n = len(jax.devices())
+    mesh = make_host_mesh(model_parallel=1)  # 1 divides any device count
+    assert mesh.shape == {"data": n, "model": 1}
+
+
+def test_make_host_mesh_indivisible_raises():
+    from repro.launch.mesh import make_host_mesh
+
+    n = len(jax.devices())
+    bad = n + 1  # > n, so it can never divide n
+    with pytest.raises(ValueError) as ei:
+        make_host_mesh(model_parallel=bad)
+    msg = str(ei.value)
+    assert str(n) in msg                      # carries the device count
+    assert "xla_force_host_platform_device_count" in msg  # fallback hint
+    with pytest.raises(ValueError):
+        make_host_mesh(model_parallel=0)
+
+
+def test_execution_context_single_device_is_noop():
+    from repro.distributed.context import ExecutionContext
+
+    ctx = ExecutionContext.single_device()
+    assert not ctx.is_sharded
+    assert ctx.n_devices == 1 and ctx.dp_size == 1
+    assert ctx.param_shardings({"entity": jnp.zeros((4, 4))}) is None
+    assert ctx.batch_sharding((8,)) is None and ctx.replicated() is None
+    x = np.arange(6.0).reshape(3, 2)
+    y = ctx.put_batch(x)
+    assert isinstance(y, jax.Array) and np.array_equal(np.asarray(y), x)
+    z = jnp.ones((5, 2))
+    assert ctx.constrain_batch(z) is z         # no constraint inserted
+    assert ctx.donate_argnums(0, 1) == (0, 1)
+    import dataclasses
+
+    no_donate = dataclasses.replace(ctx, donate_params=False)
+    assert no_donate.donate_argnums(0, 1) == ()
+
+
+def test_parse_mesh_spec():
+    from repro.distributed.context import parse_mesh_spec
+
+    assert parse_mesh_spec("data=8") == {"data": 8, "model": 1}
+    assert parse_mesh_spec("data=4,model=2") == {"data": 4, "model": 2}
+    assert parse_mesh_spec("pod=2,data=4") == {"pod": 2, "data": 4, "model": 1}
+    for bad in ("batch=4", "data=0", "data=x", "data=2,data=2", "model=2", ""):
+        with pytest.raises(ValueError):
+            parse_mesh_spec(bad)
+
+
+def test_make_execution_context_device_budget():
+    from repro.distributed.context import make_execution_context
+
+    assert not make_execution_context(None).is_sharded
+    n = len(jax.devices())
+    ctx = make_execution_context(f"data={n}")
+    assert ctx.is_sharded and ctx.n_devices == n
+    with pytest.raises(ValueError) as ei:
+        make_execution_context(f"data={n + 1}")
+    assert "xla_force_host_platform_device_count" in str(ei.value)
+
+
+def test_execution_context_sharding_helpers():
+    from repro.distributed.context import make_execution_context
+
+    P = jax.sharding.PartitionSpec
+    ctx = make_execution_context("data=1", profile="fsdp")
+    # batch axis binds only when the leading dim divides the DP ways
+    assert ctx.batch_sharding((8, 3)).spec[0] is not None
+    assert ctx.batch_sharding(()).spec == P()
+    # frozen cache buffers replicate in every profile (collective-free apply)
+    assert ctx.param_sharding("sem_cache", (4096, 256)).spec == P()
+    assert ctx.param_sharding("sem_slot", (1 << 20,)).spec == P()
+    # the big tables DO shard under fsdp
+    assert ctx.param_sharding("entity", (4096, 64)).spec[0] is not None
+    put = ctx.put_batch(np.zeros((8, 2), np.float32))
+    assert put.sharding.spec[0] is not None
+
+
 def test_prefetcher(tiny_kg):
     from repro.data.pipeline import BatchPrefetcher
     from repro.sampling import OnlineSampler
