@@ -12,12 +12,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: tput,ops,sem,semstore,"
-                         "adaptive,freebase,scaling,kernels,pipeline")
+                         "adaptive,freebase,scaling,kernels,pipeline,serving")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (adaptive, kernels_bench, operator_speedup,
-                            runtime_freebase, scaling, semantic, throughput)
+                            runtime_freebase, scaling, semantic, serving,
+                            throughput)
 
     suites = [
         ("tput", "Table 3/1: operator-level vs query-level throughput",
@@ -36,6 +37,11 @@ def main() -> None:
         ("kernels", "Pallas kernel validation/micro", kernels_bench.run),
         ("pipeline", "Pipelined dataflow executor vs sync + compile cache",
          throughput.run_pipeline_compare),
+        # Also persists its QPS/latency/invariant summary to
+        # BENCH_serving.json at the repo root (committed across PRs).
+        ("serving", "§Serving: continuous-batching engine load test "
+                    "(bit-identity + zero steady-state retraces)",
+         serving.run),
     ]
     print("name,us_per_call,derived")
     for key, desc, fn in suites:

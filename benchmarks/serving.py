@@ -1,0 +1,186 @@
+"""§Serving load test: continuous-batching engine vs the offline baseline.
+
+Replays a deterministic mixed-pattern workload through the ``ServingEngine``
+and asserts the two serving invariants (DESIGN.md §Serving):
+
+* **bit-identity** — per-request top-k entities AND scores from the async
+  engine equal ``launch/serve.py::serve_batch`` run offline on the same
+  micro-batch compositions, with a FRESH model/executor built from the same
+  seed (so nothing leaks through engine state);
+* **zero steady-state retraces** — after one warmup pass over the workload,
+  the timed open-loop and closed-loop passes compile NOTHING: every
+  schedule/encode/scorer lookup hits (signature-bucketed padding keeps the
+  jit signature set closed).
+
+Timed phases measure closed-loop throughput (max sustainable QPS) and
+open-loop latency (p50/p95/p99 under burst or ``--qps``-paced arrivals).
+The summary lands in ``BENCH_serving.json`` at the repo root (committed, so
+the serving perf trajectory accumulates across PRs); a violated invariant
+publishes ``ok: false`` BEFORE raising, so a stale green verdict can never
+survive a crashed run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # direct `python benchmarks/serving.py`
+    _root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import PooledExecutor
+from repro.data import load_dataset
+from repro.launch.serve import serve_batch
+from repro.models import ModelConfig, make_model
+from repro.serving import (ServingConfig, ServingEngine,
+                           check_against_offline, make_workload,
+                           run_closed_loop, run_open_loop)
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_serving.json")
+
+
+def _check_bit_identity(engine, model_name, dim, kg, top_k, b_max):
+    """Replay every recorded micro-batch through the offline ``serve_batch``
+    baseline on a FRESH model + executor (same init seed ⇒ same params) and
+    demand exact per-request equality of top-k ids and scores."""
+    model = make_model(model_name, ModelConfig(dim=dim, gamma=6.0))
+    params = model.init_params(jax.random.PRNGKey(0), kg.n_entities,
+                               kg.n_relations)
+    ex = PooledExecutor(model, b_max=b_max)
+    return check_against_offline(
+        engine.batch_log,
+        lambda qs: serve_batch(model, params, ex, qs, top_k=top_k)[0])
+
+
+def run(requests: int = 192, max_batch: int = 16, dim: int = 32,
+        model_name: str = "gqe", dataset: str = "FB15k", top_k: int = 10,
+        qps: float = 0.0, out_path: str = _DEFAULT_OUT) -> dict:
+    summary = {"ok": False, "suite": "serving", "model": model_name,
+               "dataset": dataset, "requests": 0, "failures": []}
+
+    def publish():
+        with open(out_path, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+        print(f"# wrote {out_path}")
+
+    try:
+        _run_inner(summary, requests, max_batch, dim, model_name, dataset,
+                   top_k, qps)
+        summary["ok"] = not summary["failures"]
+    except BaseException as e:
+        # Publish the red verdict first: a crashed sweep must not leave a
+        # stale ok=true on disk for CI's ok-check to read.
+        summary["failures"].append(f"{type(e).__name__}: {e}")
+        publish()
+        raise
+    publish()
+    return summary
+
+
+def _run_inner(summary, requests, max_batch, dim, model_name, dataset,
+               top_k, qps) -> None:
+    # Full micro-batches only: the workload divides max_batch so every flush
+    # is size-triggered and the replayed compositions are exactly the warmup
+    # compositions (the zero-retrace claim is about a replayed workload).
+    requests -= requests % max_batch
+    assert requests >= 2 * max_batch, "workload too small to measure"
+    kg, _, _ = load_dataset(dataset)
+    workload = make_workload(kg, requests, seed=11)
+    model = make_model(model_name, ModelConfig(dim=dim, gamma=6.0))
+    params = model.init_params(jax.random.PRNGKey(0), kg.n_entities,
+                               kg.n_relations)
+    b_max = 256
+    cfg = ServingConfig(max_batch=max_batch, max_wait_ms=2000.0,
+                        queue_depth=64, top_k=top_k, record_batches=True)
+    engine = ServingEngine(model, params,
+                           executor=PooledExecutor(model, b_max=b_max),
+                           cfg=cfg)
+
+    # -- warmup: compile every signature the replay will form ------------
+    run_closed_loop(engine, workload, concurrency=max_batch)
+    warm_compiles = engine.retraces()
+    engine.reset_counters(clear_log=True)
+
+    # -- timed closed loop: max sustainable throughput -------------------
+    closed = run_closed_loop(engine, workload, concurrency=max_batch)
+    closed_retraces = engine.retraces()
+    emit(f"serving/{dataset}/{model_name}/closed_qps",
+         1e6 / max(closed.qps, 1e-9), f"qps={closed.qps:.0f}")
+    if closed_retraces != 0:
+        summary["failures"].append(
+            f"{closed_retraces} retraces in the closed-loop replay "
+            f"(warmup: {warm_compiles} cold misses)")
+
+    # -- timed open loop: latency under offered load ---------------------
+    open_rep = run_open_loop(engine, workload, qps=qps)
+    open_retraces = engine.retraces() - closed_retraces
+    lat = open_rep.latency_ms
+    emit(f"serving/{dataset}/{model_name}/open_qps",
+         1e6 / max(open_rep.qps, 1e-9), f"qps={open_rep.qps:.0f}")
+    emit(f"serving/{dataset}/{model_name}/latency_p50", lat["p50"] * 1e3,
+         f"{lat['p50']:.1f} ms")
+    emit(f"serving/{dataset}/{model_name}/latency_p95", lat["p95"] * 1e3,
+         f"{lat['p95']:.1f} ms")
+    emit(f"serving/{dataset}/{model_name}/latency_p99", lat["p99"] * 1e3,
+         f"{lat['p99']:.1f} ms")
+    if qps == 0 and open_retraces != 0:
+        # A paced open loop may form partial batches (unwarmed signatures);
+        # the burst replay must not.
+        summary["failures"].append(
+            f"{open_retraces} retraces in the open-loop burst replay")
+
+    # -- bit-identity vs the offline serve_batch oracle ------------------
+    st = engine.stats()
+    engine.close()
+    checked = _check_bit_identity(engine, model_name, dim, kg, top_k, b_max)
+    assert checked >= 2 * requests, (checked, requests)
+    emit(f"serving/{dataset}/{model_name}/bit_identity", 0.0,
+         f"{checked} requests == offline serve_batch")
+    emit(f"serving/{dataset}/{model_name}/retraces", 0.0,
+         f"{closed_retraces + open_retraces} (warmup: {warm_compiles} "
+         f"cold misses)")
+
+    summary.update({
+        "requests": requests,
+        "max_batch": max_batch,
+        "dim": dim,
+        "top_k": top_k,
+        "qps_offered": qps,
+        "qps_closed": round(closed.qps, 1),
+        "qps_open": round(open_rep.qps, 1),
+        "latency_ms": {k: round(v, 3) for k, v in lat.items()},
+        "closed_latency_ms": {k: round(v, 3)
+                              for k, v in closed.latency_ms.items()},
+        "warmup_cache_misses": warm_compiles,
+        "steady_state_retraces": closed_retraces + open_retraces,
+        "bit_identical_requests": checked,
+        "mean_batch_size": round(st["mean_batch_size"], 2),
+        "flushes": st["flushes"],
+    })
+    for name in ("top_entities", "scores"):  # spot-check payload shape
+        assert name in engine.batch_log[0].results[0]
+    if summary["failures"]:
+        raise AssertionError("; ".join(summary["failures"]))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=192)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--model", default="gqe")
+    ap.add_argument("--dataset", default="FB15k")
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open-loop pacing; 0 = burst (retrace-assertable)")
+    args = ap.parse_args()
+    run(requests=args.requests, max_batch=args.max_batch, dim=args.dim,
+        model_name=args.model, dataset=args.dataset, top_k=args.top_k,
+        qps=args.qps)

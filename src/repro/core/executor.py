@@ -89,11 +89,20 @@ class PooledExecutor:
         self.ctx = ctx or ExecutionContext.single_device()
         self._sched_cache = CompileCache(cache_size, name="schedule")
         self._encode_cache = CompileCache(cache_size, name="encode")
+        self._encode_jit_cache = CompileCache(cache_size, name="encode_jit")
 
     def cache_stats(self) -> Dict[str, Dict[str, float]]:
-        """Hit/miss/eviction counters for both signature-keyed caches."""
+        """Hit/miss/eviction counters for every signature-keyed cache."""
         return {"schedule": self._sched_cache.stats(),
-                "encode": self._encode_cache.stats()}
+                "encode": self._encode_cache.stats(),
+                "encode_jit": self._encode_jit_cache.stats()}
+
+    def reset_cache_counters(self) -> None:
+        """Zero counters on every cache (contents kept) — e.g. after serving
+        warmup so steady-state retraces are measured over traffic only."""
+        for c in (self._sched_cache, self._encode_cache,
+                  self._encode_jit_cache):
+            c.reset_counters()
 
     # ------------------------------------------------------------------ prep
     def prepare(self, queries: Sequence[QueryInstance]) -> PreparedBatch:
@@ -182,11 +191,37 @@ class PooledExecutor:
         self._encode_cache.put(key, encode)
         return encode
 
-    def encode(self, params, queries: Sequence[QueryInstance]) -> jnp.ndarray:
-        """Convenience eager path returning states in ORIGINAL query order."""
+    def encode_fn_compiled(self, prepared: PreparedBatch):
+        """``jax.jit``-compiled twin of ``encode_fn``, cached per signature.
+
+        The trainer never needs this (its encode closure is embedded inside
+        the fused jitted train step), but inference paths that call encode
+        standalone — the serving engine and the offline ``serve_batch``
+        baseline — would otherwise dispatch every pool step as a separate
+        eager op. One compiled program per signature keeps steady-state
+        serving at zero retraces, and both serving paths sharing THIS cache
+        key is what makes their outputs bit-identical."""
+        key = prepared.signature
+        fn = self._encode_jit_cache.get(key)
+        if fn is None:
+            fn = jax.jit(self.encode_fn(prepared))
+            self._encode_jit_cache.put(key, fn)
+        return fn
+
+    def encode(self, params, queries: Sequence[QueryInstance],
+               compiled: bool = False) -> jnp.ndarray:
+        """Convenience path returning states in ORIGINAL query order.
+
+        ``compiled=False`` (default) runs the encode closure eagerly —
+        bit-for-bit the historical behavior. ``compiled=True`` routes through
+        the per-signature jitted program (``encode_fn_compiled``) — the
+        serving path, where the whole-batch program amortizes to zero
+        retraces in steady state."""
         prepared = self.prepare(queries)
         steps, ans = prepared.device_args()
-        states = self.encode_fn(prepared)(params, steps, ans)
+        fn = (self.encode_fn_compiled(prepared) if compiled
+              else self.encode_fn(prepared))
+        states = fn(params, steps, ans)
         inv = np.empty_like(prepared.order)
         inv[prepared.order] = np.arange(len(prepared.order))
         return states[jnp.asarray(inv)]
@@ -220,8 +255,14 @@ class QueryLevelExecutor:
     def encode_fn(self, prepared: PreparedBatch):
         return self._inner.encode_fn(prepared)
 
+    def encode_fn_compiled(self, prepared: PreparedBatch):
+        return self._inner.encode_fn_compiled(prepared)
+
     def cache_stats(self) -> Dict[str, Dict[str, float]]:
         return self._inner.cache_stats()
+
+    def reset_cache_counters(self) -> None:
+        self._inner.reset_cache_counters()
 
     def prepare_groups(self, queries: Sequence[QueryInstance]):
         groups: Dict[str, List[QueryInstance]] = {}
@@ -231,11 +272,13 @@ class QueryLevelExecutor:
             idx.setdefault(q.pattern, []).append(i)
         return groups, idx
 
-    def encode(self, params, queries: Sequence[QueryInstance]) -> jnp.ndarray:
+    def encode(self, params, queries: Sequence[QueryInstance],
+               compiled: bool = False) -> jnp.ndarray:
         groups, idx = self.prepare_groups(queries)
         out = [None] * len(queries)
         for pat, qs in groups.items():
-            states = self._inner.encode(params, qs)  # one fragment per pattern
+            # one fragment per pattern
+            states = self._inner.encode(params, qs, compiled=compiled)
             for j, i in enumerate(idx[pat]):
                 out[i] = states[j]
         return jnp.stack(out)

@@ -171,6 +171,17 @@ class ExecutionContext:
     def donate_argnums(self, *argnums: int) -> Tuple[int, ...]:
         return tuple(argnums) if self.donate_params else ()
 
+    def replicated_out_kwargs(self) -> Dict:
+        """``jax.jit`` kwargs pinning every output replicated. The serving
+        scorer reads its ``[B, E]`` logits back to host on every micro-batch;
+        without this the all-entity matmul's output inherits whatever layout
+        XLA picks for the sharded entity table, and the host readback pays a
+        cross-device gather per request batch instead of one collective at
+        program exit. Empty (no constraint) single-device."""
+        if self.mesh is None:
+            return {}
+        return {"out_shardings": self.replicated()}
+
 
 # --------------------------------------------------------------------------
 # Mesh-spec parsing (the launch surface: ``--mesh data=N[,model=M]``)

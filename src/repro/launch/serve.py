@@ -1,16 +1,27 @@
-"""Batched query-answering service (Atom-style serving on the same
-operator-level engine). Loads a checkpoint, accepts batches of mixed-pattern
-queries and returns top-k entities per query — the NGDB retrieval path.
+"""NGDB serving driver — a thin CLI over the continuous-batching engine
+(``repro/serving``, DESIGN.md §Serving).
 
-Top-k selection is O(E) (``np.argpartition`` + a partial sort of the k
-survivors) instead of a full O(E log E) ``argsort`` per query, and the
-driver reports p50/p95 batch latency alongside throughput.
+Generates a deterministic mixed-pattern request stream and drives the
+``ServingEngine`` either closed-loop (``--concurrency`` requests in flight —
+the max-throughput probe) or open-loop (``--qps`` fixed arrival rate — the
+latency-under-load probe), reporting QPS, p50/p95/p99 latency, flush/batch
+shape statistics and steady-state retrace counts.
 
-With ``--semantic-store`` the service runs out-of-core (DESIGN.md
-§SemanticStore): query anchors are staged into the bounded device hot-set
-cache before encoding, and all-entity scoring streams H_sem in bounded
-chunks from the mmap store (``score_all_chunked``) — the full ``[E, d_l]``
-table is never materialized.
+Composes with the rest of the launch surface:
+
+* ``--semantic-store DIR`` serves out-of-core (DESIGN.md §SemanticStore):
+  anchors stage into the bounded device hot set on the batcher thread, and
+  all-entity scoring streams H_sem from the mmap store in chunks.
+* ``--mesh data=N[,model=M]`` serves mesh-sharded (DESIGN.md §Sharding):
+  tables materialize into their NamedShardings and the scorer jit pins its
+  logits replicated for host readback.
+
+``serve_batch`` remains the one-shot OFFLINE baseline (used by benchmarks
+and tests as the bit-identity oracle): it shares the engine's compiled
+encode programs and process-wide cached scorer, so the two paths produce
+identical results on identical micro-batch compositions — and repeated
+calls trace ``score_all`` exactly once (the historical per-call re-jit is
+fixed by routing through ``serving.scorer_for``).
 """
 from __future__ import annotations
 
@@ -23,35 +34,41 @@ import numpy as np
 
 from repro.core import PooledExecutor
 from repro.data import load_dataset
-from repro.models import ModelConfig, make_model
-from repro.sampling import OnlineSampler
+from repro.distributed.context import make_execution_context
+from repro.models import ModelConfig, make_model, model_names
+from repro.serving import (ServingConfig, ServingEngine, make_workload,
+                           run_closed_loop, run_open_loop, scorer_for,
+                           topk_desc)
 from repro.training.checkpoint import load_checkpoint
 
-
-def topk_desc(scores: np.ndarray, k: int) -> np.ndarray:
-    """Indices of the k largest entries per row, descending — argpartition
-    (linear in E) followed by an O(k log k) sort of just the survivors."""
-    k = min(k, scores.shape[1])
-    part = np.argpartition(-scores, k - 1, axis=1)[:, :k]
-    part_scores = np.take_along_axis(scores, part, axis=1)
-    order = np.argsort(-part_scores, axis=1, kind="stable")
-    return np.take_along_axis(part, order, axis=1)
+__all__ = ["serve_batch", "topk_desc", "main"]  # topk_desc re-exported
 
 
 def serve_batch(model, params, executor, queries, top_k: int = 10,
-                score_all_fn=None, sem_cache=None):
+                score_all_fn=None, sem_cache=None, ctx=None):
+    """One-shot synchronous batch serving — the offline baseline the engine
+    is verified against. Encoding goes through the executor's per-signature
+    compiled programs and scoring through the process-wide cached jit
+    (``scorer_for``; pass the engine's ``ctx`` under a mesh so both paths
+    resolve the SAME scorer program) — zero retraces across repeated
+    calls."""
     if sem_cache is not None:
+        if score_all_fn is None:
+            # Hot-set-cache params cannot dense-score (score_all refuses the
+            # bounded buffer); fail before doing any staging work.
+            raise ValueError(
+                "serve_batch with sem_cache needs score_all_fn (e.g. "
+                "lambda p, q: model.score_all_chunked(p, q, store.read_rows))")
         # Serving counts as synchronous staging (no pipeline in front of it);
         # steady traffic converges to hits as the hot set fills.
         anchors = np.concatenate([q.anchors for q in queries])
         stage = sem_cache.plan(anchors)
         if stage is not None:
             params = sem_cache.apply_to(params, stage)
-    states = executor.encode(params, queries)
-    if score_all_fn is not None:
-        scores = np.asarray(score_all_fn(params, states))
-    else:
-        scores = np.asarray(jax.jit(model.score_all)(params, states))
+    states = executor.encode(params, queries, compiled=True)
+    if score_all_fn is None:
+        score_all_fn = scorer_for(model, ctx)
+    scores = np.asarray(score_all_fn(params, states))
     idx = topk_desc(scores, top_k)
     return [
         {"pattern": q.pattern,
@@ -66,21 +83,43 @@ def serve_batch(model, params, executor, queries, top_k: int = 10,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="FB15k")
-    ap.add_argument("--model", default="betae")
+    ap.add_argument("--model", default="betae", choices=model_names())
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--batches", type=int, default=4)
-    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=256,
+                    help="total requests in the generated workload")
     ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open-loop arrival rate; 0 = closed loop at "
+                         "--concurrency in-flight requests")
+    ap.add_argument("--concurrency", type=int, default=32,
+                    help="closed-loop in-flight window (ignored with --qps)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="engine micro-batch size-flush threshold")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="engine age-flush: max wait of the oldest pending "
+                         "request before a partial batch dispatches")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="bounded admission queue (backpressure limit)")
     ap.add_argument("--semantic-store", default=None, metavar="DIR",
                     help="serve out-of-core: H_sem stays on disk; device "
                          "holds only the hot-set cache (built by "
                          "launch/train.py --semantic-store)")
     ap.add_argument("--semantic-budget-rows", type=int, default=2048)
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="mesh-shard serving: data=N[,model=M] (DESIGN.md "
+                         "§Sharding); emulate devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--profile", default="2d", choices=["2d", "fsdp"])
     args = ap.parse_args()
 
+    ctx = make_execution_context(args.mesh, profile=args.profile)
+    if ctx.is_sharded:
+        print(f"execution context: {ctx.describe()} "
+              f"({ctx.n_devices} devices, dp={ctx.dp_size})")
+
     kg, _, _ = load_dataset(args.dataset)
-    store, cache, score_all_fn = None, None, None
+    store, cache = None, None
     sem_dim = 0
     if args.semantic_store:
         from repro.semantic import SemanticCache, SemanticStore
@@ -89,12 +128,14 @@ def main() -> None:
         assert store.n_rows == kg.n_entities, (store.n_rows, kg.n_entities)
         sem_dim = store.dim
         cache = SemanticCache(store, budget_rows=min(args.semantic_budget_rows,
-                                                     kg.n_entities))
+                                                     kg.n_entities), ctx=ctx)
         print(f"semantic store: {store.n_rows}x{store.dim} {store.quant}, "
               f"{cache.device_resident_sem_bytes/1e6:.2f} MB device-resident")
-    model = make_model(args.model, ModelConfig(dim=args.dim, semantic_dim=sem_dim))
+    model = make_model(args.model,
+                       ModelConfig(dim=args.dim, semantic_dim=sem_dim,
+                                   entity_pad=max(1, ctx.n_devices)))
     params = model.init_params(jax.random.PRNGKey(0), kg.n_entities,
-                               kg.n_relations, semantic_cache=cache)
+                               kg.n_relations, semantic_cache=cache, ctx=ctx)
     if args.ckpt_dir:
         restored = load_checkpoint(args.ckpt_dir,
                                    template={"params": params, "opt": None})
@@ -103,31 +144,42 @@ def main() -> None:
             print(f"loaded checkpoint step={restored[0]}")
             if cache is not None:
                 cache.reset()  # restored cache buffers: nothing resident yet
-    if cache is not None:
-        score_all_fn = lambda p, q: model.score_all_chunked(p, q, store.read_rows)  # noqa: E731
 
-    executor = PooledExecutor(model, b_max=256)
-    sampler = OnlineSampler(kg, seed=7)
-    total, lat_ms = 0, []
-    for b in range(args.batches):
-        queries = [s.query for s in sampler.sample_batch(args.batch_size)]
-        t0 = time.time()
-        results, params = serve_batch(model, params, executor, queries,
-                                      args.top_k, score_all_fn=score_all_fn,
-                                      sem_cache=cache)
-        dt = time.time() - t0
-        total += len(queries)
-        lat_ms.append(dt * 1e3)
-        print(f"batch {b}: {len(queries)} queries in {dt*1e3:.1f} ms "
-              f"(first: {json.dumps(results[0])[:120]}...)")
-    qps = total / (sum(lat_ms) / 1e3)
-    p50, p95 = np.percentile(lat_ms, 50), np.percentile(lat_ms, 95)
-    print(f"served {total} queries at {qps:.0f} q/s "
-          f"(p50 {p50:.1f} ms, p95 {p95:.1f} ms per batch, post-warmup)")
+    executor = PooledExecutor(model, b_max=256, ctx=ctx)
+    cfg = ServingConfig(max_batch=args.max_batch,
+                        max_wait_ms=args.max_wait_ms,
+                        queue_depth=args.queue_depth, top_k=args.top_k)
+    engine = ServingEngine(model, params, executor=executor, cfg=cfg,
+                           sem_cache=cache,
+                           sem_rows_fn=store.read_rows if store else None,
+                           ctx=ctx)
+    workload = make_workload(kg, args.requests, seed=7)
+
+    # Warmup pass compiles every signature the replay will form; the timed
+    # pass then reports steady-state numbers (and its retrace count).
+    t0 = time.time()
+    run_closed_loop(engine, workload, concurrency=args.max_batch)
+    print(f"warmup: {args.requests} requests in {time.time()-t0:.1f}s "
+          f"({engine.retraces()} cold cache misses)")
+    engine.reset_counters()
+
+    if args.qps > 0:
+        report = run_open_loop(engine, workload, qps=args.qps)
+    else:
+        report = run_closed_loop(engine, workload,
+                                 concurrency=args.concurrency)
+    st = engine.stats()
+    print(report.describe())
+    print(f"engine: {st['batches']} micro-batches "
+          f"(mean size {st['mean_batch_size']:.1f}, flushes {st['flushes']}, "
+          f"padded rows {st['padded_row_frac']:.1%}), "
+          f"{st['retraces']} steady-state retraces")
+    print(f"first: {json.dumps(report.results[0])[:140]}...")
     if cache is not None:
         cs = cache.stats()
         print(f"semantic cache: hit rate {cs['hit_rate']:.2%}, "
               f"{cs['rows_staged']} rows staged from store")
+    engine.close()
 
 
 if __name__ == "__main__":

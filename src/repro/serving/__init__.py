@@ -1,0 +1,14 @@
+"""Continuous-batching serving subsystem (DESIGN.md §Serving)."""
+from repro.serving.engine import (BatchRecord, CachedScorer, ServingConfig,
+                                  ServingEngine, pad_to_bucket, scorer_for,
+                                  topk_desc)
+from repro.serving.loadgen import (LoadReport, check_against_offline,
+                                   latency_summary, make_workload,
+                                   run_closed_loop, run_open_loop)
+
+__all__ = [
+    "BatchRecord", "CachedScorer", "ServingConfig", "ServingEngine",
+    "pad_to_bucket", "scorer_for", "topk_desc",
+    "LoadReport", "check_against_offline", "latency_summary",
+    "make_workload", "run_closed_loop", "run_open_loop",
+]

@@ -1,0 +1,472 @@
+"""Continuous-batching serving engine (DESIGN.md §Serving).
+
+The ROADMAP's north star is serving heavy traffic, and the paper's core
+claim — operator-level dataflow execution sustains high utilization across
+diverse logical patterns — applies to inference exactly as to training:
+requests arrive one at a time with arbitrary patterns, and the engine's job
+is to coalesce them into the same pooled micro-batches the trainer runs.
+
+Pieces:
+
+* **Bounded admission queue** — ``submit`` enqueues a request and returns a
+  ``concurrent.futures.Future``; a full queue blocks the caller (or raises
+  ``queue.Full`` with a timeout), which is the backpressure contract: load
+  beyond capacity queues at the CLIENT, not in unbounded engine memory.
+* **Batcher thread** — drains the queue into operator-level micro-batches
+  with a size/age flush policy: flush as soon as ``max_batch`` requests are
+  pending, or when the oldest pending request has waited ``max_wait_ms``.
+  One batcher thread by design (mirrors the pipeline's single scheduler
+  thread): it owns the params handle, so semantic-cache staging — the same
+  ``plan``/``apply_to`` handshake ``data/pipeline.py`` uses for training —
+  needs no cross-thread sequencing.
+* **Signature-bucketed padding** — micro-batches pad to the next power-of-
+  two size by repeating the last query (padded rows are computed and
+  discarded). Bounding the batch-size set bounds the jit signature set: the
+  all-entity scorer sees only pow2 ``B``s, and the executor's per-signature
+  compiled encode programs (``PooledExecutor.encode_fn_compiled``) stay hot,
+  so a replayed workload runs at ZERO steady-state retraces.
+* **Chunked all-entity scoring** — with a semantic store the engine scores
+  through ``score_all_chunked`` (streams H_sem from the mmap store in
+  bounded chunks; the full ``[E, d_l]`` table never materializes); dense
+  mode scores through one process-wide cached jit per model (``scorer_for``
+  — also the fix for ``serve_batch`` retracing ``score_all`` per call).
+* **Per-request latency accounting** — each future's result carries its
+  end-to-end latency; ``stats()`` aggregates p50/p95/p99 over a bounded
+  window of completed requests.
+
+Offline/online parity: the engine and the one-shot ``launch/serve.py::
+serve_batch`` baseline share the SAME compiled encode programs, the SAME
+cached scorer and the SAME ``topk_desc`` — so on identical micro-batch
+compositions their per-request top-k is bit-identical, which
+``benchmarks/serving.py`` asserts under load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.compile_cache import CompileCache
+from repro.core.executor import PooledExecutor
+from repro.core.patterns import QueryInstance
+
+
+def topk_desc(scores: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k largest entries per row, descending — argpartition
+    (linear in E) followed by an O(k log k) sort of just the survivors."""
+    k = min(k, scores.shape[1])
+    part = np.argpartition(-scores, k - 1, axis=1)[:, :k]
+    part_scores = np.take_along_axis(scores, part, axis=1)
+    order = np.argsort(-part_scores, axis=1, kind="stable")
+    return np.take_along_axis(part, order, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Process-wide scorer cache (the serve_batch re-jit fix)
+# --------------------------------------------------------------------------
+
+class CachedScorer:
+    """One jitted ``model.score_all`` with a host-side trace counter.
+
+    The counter bumps only while jax is TRACING the body, so ``traces`` is
+    exactly the number of compilations — the regression surface for the old
+    ``serve_batch`` bug (``jax.jit(model.score_all)`` rebuilt per call, so
+    every batch retraced)."""
+
+    def __init__(self, model, ctx=None):
+        self._counter = {"traces": 0}
+        counter = self._counter
+
+        def _score(params, q):
+            counter["traces"] += 1  # runs at trace time only
+            return model.score_all(params, q)
+
+        kwargs = ctx.replicated_out_kwargs() if ctx is not None else {}
+        self._fn = jax.jit(_score, **kwargs)
+
+    def __call__(self, params, q):
+        return self._fn(params, q)
+
+    @property
+    def traces(self) -> int:
+        return self._counter["traces"]
+
+
+_SCORER_CACHE = CompileCache(32, name="score_all_jit")
+_SCORER_LOCK = threading.Lock()
+
+
+def scorer_for(model, ctx=None) -> CachedScorer:
+    """Process-wide cached jit of ``model.score_all``.
+
+    Keyed by everything ``score_all`` actually closes over — model class,
+    config and entity count (plus the mesh layout when sharded) — so two
+    instances of the same zoo family share one compiled program, and
+    repeated ``serve_batch`` calls trace exactly once per scorer shape."""
+    key = (type(model).__name__, model.cfg,
+           getattr(model, "n_entities", None),
+           ctx.describe() if ctx is not None and ctx.is_sharded else None)
+    with _SCORER_LOCK:
+        s = _SCORER_CACHE.get(key)
+        if s is None:
+            s = _SCORER_CACHE.put(key, CachedScorer(model, ctx))
+    return s
+
+
+def pad_to_bucket(queries: Sequence[QueryInstance]):
+    """Pad a micro-batch to the next power-of-two length by repeating the
+    last query. Real rows are untouched (pattern-sorted canonicalization and
+    pool padding happen downstream in ``prepare`` regardless); the duplicate
+    rows are scored and dropped. Returns ``(padded, n_real)``."""
+    n = len(queries)
+    if n == 0:
+        return [], 0
+    b = 1 << (n - 1).bit_length()
+    return list(queries) + [queries[-1]] * (b - n), n
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServingConfig:
+    max_batch: int = 16        # size-triggered flush threshold
+    max_wait_ms: float = 5.0   # age-triggered flush: oldest pending request
+    queue_depth: int = 256     # bounded admission queue (backpressure)
+    top_k: int = 10
+    bucket: bool = True        # signature-bucketed (pow2) batch padding
+    record_batches: bool = False  # keep a log of (padded batch, results)
+    latency_window: int = 8192    # completed-request latencies retained
+
+
+@dataclasses.dataclass
+class _Request:
+    query: QueryInstance
+    top_k: int
+    future: Future
+    t_submit: float
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """One executed micro-batch, for offline-oracle replay: the exact padded
+    composition the engine ran, plus the per-request results (real rows
+    only, submission order)."""
+
+    queries: List[QueryInstance]   # padded composition as executed
+    n_real: int
+    flush: str                     # size | age | drain
+    results: List[Dict]
+
+
+class ServingEngine:
+    """Async continuous-batching NGDB query service.
+
+    ``submit`` is thread-safe and returns a future; a single batcher thread
+    coalesces pending requests into pooled micro-batches and resolves the
+    futures. ``sem_cache``/``sem_rows_fn`` switch on out-of-core serving:
+    anchor rows are staged into the device hot set on the batcher thread
+    before encode, and all-entity scoring streams H_sem via ``sem_rows_fn``
+    (e.g. ``SemanticStore.read_rows``) instead of a full-resident table.
+    """
+
+    def __init__(self, model, params, executor=None,
+                 cfg: Optional[ServingConfig] = None, sem_cache=None,
+                 sem_rows_fn=None, ctx=None, started: bool = True):
+        self.model = model
+        self.params = params
+        self.cfg = cfg or ServingConfig()
+        if self.cfg.max_batch < 1 or self.cfg.queue_depth < 1:
+            raise ValueError("max_batch and queue_depth must be >= 1")
+        self.ctx = ctx
+        self.executor = executor or PooledExecutor(model, b_max=256, ctx=ctx)
+        if sem_cache is not None and sem_rows_fn is None:
+            raise ValueError(
+                "out-of-core serving needs sem_rows_fn (e.g. store.read_rows)"
+                " to stream H_sem for all-entity scoring")
+        self.sem_cache = sem_cache
+        self.sem_rows_fn = sem_rows_fn
+        self._scorer = scorer_for(model, ctx)
+        self._scorer_traces0 = self._scorer.traces
+        self._q: "queue.Queue[_Request]" = queue.Queue(maxsize=self.cfg.queue_depth)
+        self._stop = threading.Event()
+        self._closed = False
+        self._lock = threading.Lock()
+        self._lat_ms: deque = deque(maxlen=self.cfg.latency_window)
+        self._submitted = 0
+        self._completed = 0
+        self._batches = 0
+        self._batch_rows = 0
+        self._padded_rows = 0
+        self._failures = 0
+        self._flushes = {"size": 0, "age": 0, "drain": 0}
+        self.batch_log: List[BatchRecord] = []
+        self._thread: Optional[threading.Thread] = None
+        if started:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="serving-batcher")
+        self._thread.start()
+
+    def close(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop accepting requests; by default serve everything already
+        admitted (the batcher flushes the tail immediately once the queue
+        is empty), then join the batcher thread."""
+        with self._lock:
+            self._closed = True
+        if drain and self._thread is not None and self._thread.is_alive():
+            deadline = time.monotonic() + timeout
+            while time.monotonic() < deadline:
+                with self._lock:
+                    if self._completed >= self._submitted:
+                        break
+                time.sleep(0.005)
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        # Anything still queued (drain=False or timeout) fails loudly rather
+        # than leaving callers blocked on forever-pending futures.
+        self._fail_queued()
+
+    def _fail_queued(self) -> None:
+        try:
+            while True:
+                r = self._q.get_nowait()
+                r.future.set_exception(RuntimeError("serving engine closed"))
+                with self._lock:
+                    self._completed += 1
+        except queue.Empty:
+            pass
+
+    def __enter__(self) -> "ServingEngine":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, query: QueryInstance, top_k: Optional[int] = None,
+               timeout: Optional[float] = None) -> Future:
+        """Admit one request. Blocks when the admission queue is full
+        (bounded-memory backpressure); with ``timeout`` raises ``queue.Full``
+        instead. The returned future resolves to the same result dict
+        ``serve_batch`` produces, plus ``latency_ms``/``batch_size``."""
+        k = self.cfg.top_k if top_k is None else top_k
+        if k < 1:
+            raise ValueError(f"top_k must be >= 1, got {k}")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("serving engine is closed")
+            self._submitted += 1
+        r = _Request(query, k, Future(), time.perf_counter())
+        try:
+            self._q.put(r, timeout=timeout)
+        except queue.Full:
+            with self._lock:
+                self._submitted -= 1
+            raise
+        # close() may have stopped the batcher and drained the queue between
+        # our _closed check and the put; a straggler landing in the
+        # now-unwatched queue must fail, not strand its future forever.
+        if self._stop.is_set():
+            self._fail_queued()
+        return r.future
+
+    def submit_many(self, queries: Sequence[QueryInstance]) -> List[Future]:
+        return [self.submit(q) for q in queries]
+
+    # -------------------------------------------------------------- batcher
+    def _run(self) -> None:
+        while True:
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return
+                continue
+            batch = [first]
+            # Age from SUBMIT time, not dequeue time: a request that sat in
+            # the admission queue behind a long batch has already spent its
+            # wait budget, so the latency bound covers queueing too.
+            deadline = first.t_submit + self.cfg.max_wait_ms / 1e3
+            flush = "size"
+            while len(batch) < self.cfg.max_batch:
+                try:
+                    # Greedy first: coalesce everything ALREADY queued before
+                    # consulting the age deadline — an expired deadline bounds
+                    # additional waiting, it must not collapse a backlogged
+                    # engine into size-1 batches.
+                    batch.append(self._q.get_nowait())
+                    continue
+                except queue.Empty:
+                    pass
+                with self._lock:
+                    draining = self._closed
+                if draining:
+                    flush = "drain"  # tail: don't sit out the age window
+                    break
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    flush = "age"
+                    break
+                try:
+                    batch.append(self._q.get(timeout=min(remaining, 0.05)))
+                except queue.Empty:
+                    continue
+            self._execute(batch, flush)
+
+    def _execute(self, batch: List[_Request], flush: str) -> None:
+        # Exception, not BaseException: SystemExit/KeyboardInterrupt take
+        # the batcher down rather than being swallowed into futures. Within
+        # Exception, only recoverable per-request errors (e.g. malformed
+        # pattern → KeyError) get poison isolation — MemoryError fails the
+        # whole batch at once, never an N-fold solo-retry storm of the same
+        # allocation.
+        try:
+            results = self._serve(batch, flush)
+        except Exception as e:
+            if len(batch) > 1 and not isinstance(e, MemoryError):
+                # Isolate the poison request: one malformed query must not
+                # fail its co-batched neighbors. Solo retries carry their own
+                # flush label so stats/batch_log report what actually ran,
+                # not the original batch's trigger.
+                for r in batch:
+                    self._execute([r], "retry")
+                return
+            for r in batch:
+                r.future.set_exception(e)
+            with self._lock:
+                self._failures += len(batch)
+                self._completed += len(batch)
+            return
+        t_done = time.perf_counter()
+        n = len(batch)
+        for r, res in zip(batch, results):
+            lat_ms = (t_done - r.t_submit) * 1e3
+            res["latency_ms"] = lat_ms
+            res["batch_size"] = n
+            with self._lock:
+                self._lat_ms.append(lat_ms)
+                self._completed += 1
+            r.future.set_result(res)
+
+    def _serve(self, batch: List[_Request], flush: str) -> List[Dict]:
+        queries = [r.query for r in batch]
+        if self.cfg.bucket:
+            padded, n_real = pad_to_bucket(queries)
+        else:
+            padded, n_real = list(queries), len(queries)
+        params = self.params
+        if self.sem_cache is not None:
+            # Staging folds into the batcher thread: the plan's store read +
+            # device put and the apply scatter happen here, once per
+            # micro-batch, before the encode that gathers the rows. Single
+            # batcher thread ⇒ plan order == apply order for free.
+            anchors = np.concatenate([q.anchors for q in padded])
+            stage = self.sem_cache.plan(anchors)
+            if stage is not None:
+                params = self.sem_cache.apply_to(params, stage)
+                self.params = params
+        states = self.executor.encode(params, padded, compiled=True)
+        if self.sem_cache is not None:
+            scores = self.model.score_all_chunked(params, states,
+                                                  self.sem_rows_fn)
+        else:
+            scores = np.asarray(self._scorer(params, states))
+        # Select per DISTINCT k, not one k_max selection sliced per request:
+        # argpartition at k_max can arrange boundary-tied ids differently
+        # than argpartition at k, and the contract is exact per-request
+        # equality with serve_batch(top_k=k). Mixed-k batches are rare, so
+        # this is one topk_desc call in the common case.
+        by_k: Dict[int, List[int]] = {}
+        for i, r in enumerate(batch):
+            by_k.setdefault(min(r.top_k, scores.shape[1]), []).append(i)
+        results: List[Optional[Dict]] = [None] * len(batch)
+        for k, rows in by_k.items():
+            idx = topk_desc(scores[rows], k)
+            for j, i in enumerate(rows):
+                r = batch[i]
+                sel = idx[j]
+                results[i] = {
+                    "pattern": r.query.pattern,
+                    "anchors": r.query.anchors.tolist(),
+                    "relations": r.query.relations.tolist(),
+                    "top_entities": sel.tolist(),
+                    "scores": scores[i, sel].round(3).tolist(),
+                }
+        with self._lock:
+            self._batches += 1
+            self._batch_rows += len(padded)
+            self._padded_rows += len(padded) - n_real
+            self._flushes[flush] = self._flushes.get(flush, 0) + 1
+            if self.cfg.record_batches:
+                self.batch_log.append(BatchRecord(
+                    queries=padded, n_real=n_real, flush=flush,
+                    results=results))
+        return results
+
+    # -------------------------------------------------------------- metrics
+    def retraces(self) -> int:
+        """Cold signature work since the last ``reset_counters``: executor
+        cache misses (schedule/encode/encode_jit — a new signature misses
+        all three, so this over-counts distinct XLA programs on purpose) +
+        scorer traces. The serving steady-state claim is that a replayed
+        workload keeps this at ZERO: no scheduling, closure-building or
+        compile work of any kind."""
+        cs = self.executor.cache_stats()
+        return (sum(int(v["misses"]) for v in cs.values())
+                + self._scorer.traces - self._scorer_traces0)
+
+    def reset_counters(self, clear_log: bool = True) -> None:
+        """Zero retrace/latency/flush counters (after warmup) — compiled
+        programs and cache contents are kept."""
+        self.executor.reset_cache_counters()
+        self._scorer_traces0 = self._scorer.traces
+        with self._lock:
+            self._lat_ms.clear()
+            self._batches = self._batch_rows = self._padded_rows = 0
+            self._failures = 0
+            self._flushes = {"size": 0, "age": 0, "drain": 0}
+            if clear_log:
+                self.batch_log = []
+
+    def stats(self) -> Dict:
+        with self._lock:
+            lat = np.asarray(self._lat_ms, dtype=np.float64)
+            out = {
+                "submitted": self._submitted,
+                "completed": self._completed,
+                "failures": self._failures,
+                "batches": self._batches,
+                "flushes": dict(self._flushes),
+                "mean_batch_size": (self._batch_rows / self._batches
+                                    if self._batches else 0.0),
+                "padded_row_frac": (self._padded_rows / self._batch_rows
+                                    if self._batch_rows else 0.0),
+            }
+        if len(lat):
+            from repro.serving.loadgen import latency_summary
+
+            out["latency_ms"] = {**latency_summary(lat),
+                                 "max": float(lat.max())}
+        out["retraces"] = self.retraces()
+        out["caches"] = self.executor.cache_stats()
+        out["scorer_traces"] = self._scorer.traces - self._scorer_traces0
+        if self.sem_cache is not None:
+            out["sem_cache"] = self.sem_cache.stats()
+        return out

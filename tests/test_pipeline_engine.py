@@ -108,7 +108,7 @@ def test_executor_cache_stats_exposed(tiny_kg, replay_batches):
     tr = _trainer(tiny_kg, pipeline=False)
     tr.train(2, log_every=0, batches=replay_batches[:2])
     stats = tr.compile_cache_stats()
-    assert set(stats) == {"train_step", "schedule", "encode"}
+    assert set(stats) == {"train_step", "schedule", "encode", "encode_jit"}
     assert stats["train_step"]["misses"] >= 1
 
 

@@ -106,6 +106,88 @@ def test_quantize_roundtrip_bound(seed):
     assert err.max() <= float(scale) / 2 + 1e-6  # half-ulp rounding bound
 
 
+def _filtered_ranks_oracle(scores: np.ndarray, answers: np.ndarray):
+    """Brute-force twin of ``training/eval.py::filtered_ranks`` with the
+    stable-argsort tie rule made explicit: entity ``e`` beats answer ``a``
+    iff score[e] > score[a], or the scores tie and e has the smaller index
+    (stable sort of -scores keeps index order within a tie)."""
+    out = []
+    ans = set(int(a) for a in answers)
+    for a in answers:
+        beats = sum(
+            1
+            for e in range(len(scores))
+            if e not in ans
+            and (scores[e] > scores[a] or (scores[e] == scores[a] and e < a))
+        )
+        out.append(1 + beats)
+    return np.sort(np.array(out, dtype=np.int64))
+
+
+@given(
+    st.lists(st.integers(0, 4), min_size=2, max_size=24),  # ints force ties
+    st.integers(0, 1000),
+)
+def test_filtered_ranks_vs_bruteforce(score_ints, seed):
+    from repro.training.eval import filtered_ranks
+
+    scores = np.array(score_ints, dtype=np.float64)
+    rng = np.random.default_rng(seed)
+    n_ans = int(rng.integers(1, len(scores) + 1))
+    answers = rng.choice(len(scores), size=n_ans, replace=False)
+    got = filtered_ranks(scores, answers)
+    np.testing.assert_array_equal(got, _filtered_ranks_oracle(scores, answers))
+    # filtered ranks are valid positions among (non-other-answer) entities
+    assert got.min() >= 1
+    assert got.max() <= len(scores) - len(answers) + 1
+
+
+def test_filtered_ranks_all_answers_tied():
+    """Every answer tied at the top rank filters to 1, 1, ..., 1."""
+    from repro.training.eval import filtered_ranks
+
+    scores = np.array([5.0, 5.0, 5.0, 1.0])
+    np.testing.assert_array_equal(
+        filtered_ranks(scores, np.array([0, 1, 2])), [1, 1, 1])
+
+
+@given(
+    st.integers(1, 5),                       # rows
+    st.integers(1, 24),                      # entities
+    st.integers(1, 30),                      # k (may exceed E)
+    st.integers(0, 3),                       # score vocabulary -> tie density
+    st.integers(0, 1000),
+)
+def test_topk_desc_vs_bruteforce(b, e, k, vocab, seed):
+    """``topk_desc`` must return a true top-k set in descending score order
+    for ANY tie structure and any k, including k >= E. Under ties the
+    SELECTED IDS may differ from a full stable argsort (argpartition breaks
+    ties arbitrarily), so the oracle checks the score multiset + the top-k
+    set property, not id equality."""
+    from repro.serving import topk_desc
+
+    rng = np.random.default_rng(seed)
+    scores = rng.integers(0, vocab + 1, size=(b, e)).astype(np.float64)
+    idx = topk_desc(scores, k)
+    kk = min(k, e)
+    assert idx.shape == (b, kk)
+    oracle = np.argsort(-scores, axis=1, kind="stable")[:, :kk]
+    for i in range(b):
+        row = idx[i]
+        assert len(set(row.tolist())) == kk          # no duplicates
+        picked = scores[i, row]
+        assert (np.diff(picked) <= 0).all()          # descending
+        # identical score multiset as the brute-force top-k ...
+        np.testing.assert_array_equal(np.sort(picked),
+                                      np.sort(scores[i, oracle[i]]))
+        # ... and nothing outside the selection beats anything inside
+        rest = np.delete(scores[i], row)
+        if len(rest):
+            assert rest.max() <= picked.min()
+    if k >= e:  # full ranking: a permutation ordering every entity
+        assert set(idx[0].tolist()) == set(range(e))
+
+
 @given(query_batches())
 def test_answer_slots_survive_reuse(queries):
     """Slot reuse must never hand an answer's slot to another node."""

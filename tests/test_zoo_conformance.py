@@ -1,0 +1,77 @@
+"""Zoo-wide conformance matrix: every model family × every EFO pattern.
+
+Every backbone in the zoo must serve every one of the 14 logical patterns:
+encode + all-entity scoring produce finite, deterministic (bitwise
+replayable) scores, and the hard patterns — negation and union — round-trip
+through the continuous-batching engine with exactly the offline
+``serve_batch`` top-k. This is the serving twin of the per-operator model
+tests: it pins the full model-zoo × pattern surface the paper's Table 3
+sweeps, so a regression in any one (family, pattern) cell fails by name.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import PATTERN_NAMES, PooledExecutor
+from repro.core.patterns import NEGATION_PATTERNS, UNION_PATTERNS
+from repro.launch.serve import serve_batch
+from repro.models import ModelConfig, make_model, model_names
+from repro.sampling import OnlineSampler
+from repro.serving import (ServingConfig, ServingEngine,
+                           check_against_offline, scorer_for)
+
+DIM = 8
+
+
+@pytest.fixture(scope="module", params=model_names())
+def zoo_model(request, tiny_kg):
+    """(model, params, executor) per family — module-scoped so the 14-pattern
+    scan and the engine round-trip share one init + compile set."""
+    model = make_model(request.param, ModelConfig(dim=DIM))
+    params = model.init_params(jax.random.PRNGKey(0), tiny_kg.n_entities,
+                               tiny_kg.n_relations)
+    return model, params, PooledExecutor(model, b_max=64)
+
+
+def test_family_count():
+    assert len(model_names()) == 6, model_names()
+    assert len(PATTERN_NAMES) == 14, PATTERN_NAMES
+
+
+def test_all_patterns_finite_and_deterministic(zoo_model, tiny_kg):
+    """encode + score_all over all 14 patterns: finite everywhere, and a
+    second pass reproduces the scores bit for bit."""
+    model, params, ex = zoo_model
+    sampler = OnlineSampler(tiny_kg, seed=5)
+    scorer = scorer_for(model)
+    for pattern in PATTERN_NAMES:
+        queries = [sampler.sample(pattern).query for _ in range(2)]
+        states = np.asarray(ex.encode(params, queries))
+        assert np.isfinite(states).all(), (model.name, pattern)
+        scores = np.asarray(scorer(params, ex.encode(params, queries)))
+        assert scores.shape == (2, tiny_kg.n_entities), (model.name, pattern)
+        assert np.isfinite(scores).all(), (model.name, pattern)
+        replay = np.asarray(scorer(params, ex.encode(params, queries)))
+        np.testing.assert_array_equal(scores, replay,
+                                      err_msg=f"{model.name}/{pattern}")
+
+
+def test_negation_union_engine_roundtrip(zoo_model, tiny_kg):
+    """The hard patterns (negation + union) served through the async engine
+    return exactly the offline serve_batch top-k on the same micro-batch
+    compositions — for every model family."""
+    model, params, ex = zoo_model
+    sampler = OnlineSampler(tiny_kg, seed=9)
+    patterns = list(NEGATION_PATTERNS) + list(UNION_PATTERNS)
+    queries = [sampler.sample(p).query for p in patterns]
+    cfg = ServingConfig(max_batch=8, max_wait_ms=50.0, top_k=10,
+                        record_batches=True)
+    with ServingEngine(model, params, executor=ex, cfg=cfg) as engine:
+        futs = engine.submit_many(queries)
+        results = [f.result(timeout=120) for f in futs]
+        log = list(engine.batch_log)
+    assert [r["pattern"] for r in results] == patterns
+    ex2 = PooledExecutor(model, b_max=64)  # fresh compile caches
+    checked = check_against_offline(
+        log, lambda qs: serve_batch(model, params, ex2, qs, top_k=10)[0])
+    assert checked == len(patterns)
