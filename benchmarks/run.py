@@ -12,11 +12,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: tput,ops,sem,semstore,"
-                         "adaptive,freebase,scaling,kernels,pipeline,serving")
+                         "adaptive,freebase,scaling,kernels,pipeline,serving,"
+                         "plan")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (adaptive, kernels_bench, operator_speedup,
+    from benchmarks import (adaptive, kernels_bench, operator_speedup, plan,
                             runtime_freebase, scaling, semantic, serving,
                             throughput)
 
@@ -42,6 +43,11 @@ def main() -> None:
         ("serving", "§Serving: continuous-batching engine load test "
                     "(bit-identity + zero steady-state retraces)",
          serving.run),
+        # Persists its sharing/bit-identity/retrace summary to
+        # BENCH_plan.json at the repo root (committed across PRs).
+        ("plan", "§Compiler: plan-IR CSE on an overlap-heavy replay "
+                 "(>=25% pooled rows saved, bitwise losses, zero retraces)",
+         plan.run),
     ]
     print("name,us_per_call,derived")
     for key, desc, fn in suites:

@@ -1,7 +1,9 @@
 # The paper's primary contribution: operator-level batched training.
 from repro.core.compile_cache import CompileCache
+from repro.core.compiler import build_plan, compile_batch, plan_to_dag
 from repro.core.executor import PooledExecutor, PreparedBatch, QueryLevelExecutor
 from repro.core.ops import OpType
+from repro.core.plan import CompiledPlan, PlanGraph, PlanNode, SharingReport
 from repro.core.patterns import (
     EVAL_PATTERNS,
     NEGATION_PATTERNS,
@@ -29,5 +31,12 @@ __all__ = [
     "PooledExecutor",
     "QueryLevelExecutor",
     "PreparedBatch",
+    "CompiledPlan",
+    "PlanGraph",
+    "PlanNode",
+    "SharingReport",
+    "build_plan",
+    "compile_batch",
+    "plan_to_dag",
     "CompileCache",
 ]

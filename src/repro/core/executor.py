@@ -7,64 +7,30 @@ schedule signature in an LRU ``CompileCache`` with hit/miss counters
 (DESIGN.md §Pipeline); pool sizes are bucketed so the signature set is small
 and — after warmup — every lookup hits, i.e. zero retraces in steady state.
 
-A key throughput trick: the schedule (and all slot index arrays) depend only
-on the *pattern multiset* of the batch, never on entity/relation ids. Batches
-are canonicalized by sorting on pattern, so the expensive scheduling runs once
-per structure signature and each new batch only rebinds anchor/relation ids.
-"""
+Batch preparation is delegated to the plan compiler (``core/compiler.py``,
+DESIGN.md §Compiler): ``prepare`` canonicalizes the batch, merges identical
+subqueries across all queries via CSE (``cse=False`` is the ablation path),
+lowers through the Max-Fillness scheduler, and memoizes everything
+binding-independent by the deduped topology — so each repeated structure
+only rebinds anchor/relation ids, and shared subtrees are computed once for
+every query that consumes them."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compile_cache import CompileCache
+from repro.core.compiler import compile_batch
 from repro.core.ops import OpType
 from repro.core.patterns import QueryInstance
-from repro.core.querydag import BatchedDAG, build_batched_dag
-from repro.core.scheduler import ExecutionSchedule, PoolStep, schedule
+from repro.core.plan import CompiledPlan
 
-
-def _pad1(a: np.ndarray, n: int, fill: int) -> np.ndarray:
-    out = np.full((n,), fill, dtype=np.int64)
-    out[: len(a)] = a
-    return out
-
-
-def _pad2(a: np.ndarray, n: int, fill: int) -> np.ndarray:
-    out = np.full((n, a.shape[1]), fill, dtype=np.int64)
-    out[: len(a)] = a
-    return out
-
-
-@dataclasses.dataclass
-class PreparedBatch:
-    """Everything the jitted encoder needs for one batch.
-
-    ``signature`` keys compiled PROGRAMS (it only encodes bucketed shapes, so
-    distinct structures may share one program); ``structure_key`` keys the
-    exact schedule (pattern multiset), i.e. anything caching the schedule's
-    ARRAYS must use it, not the coarser signature."""
-
-    signature: Tuple
-    structure_key: Tuple
-    meta: Tuple[Tuple[int, int, int], ...]      # static (op, card, padded_n) per step
-    slot_arrays: List[Dict[str, np.ndarray]]    # static per structure: in/out slots
-    bind_arrays: List[Dict[str, np.ndarray]]    # per batch: anchor/rel ids
-    answer_slots: np.ndarray
-    n_slots_padded: int
-    sched: ExecutionSchedule
-    patterns: List[str]
-    order: np.ndarray                           # canonical order -> original order
-
-    def device_args(self):
-        steps = [
-            {**s, **b} for s, b in zip(self.slot_arrays, self.bind_arrays)
-        ]
-        return steps, jnp.asarray(self.answer_slots)
+# Backwards-compatible name: the prepared-batch artifact is now the
+# compiler's output (same fields plus the sharing report).
+PreparedBatch = CompiledPlan
 
 
 class PooledExecutor:
@@ -79,17 +45,21 @@ class PooledExecutor:
 
     def __init__(self, model, b_max: int = 512, reuse_slots: bool = True,
                  policy: str = "max_fillness", cache_size: int = 128,
-                 ctx=None):
+                 ctx=None, cse: bool = True):
         from repro.distributed.context import ExecutionContext
 
         self.model = model
         self.b_max = b_max
         self.reuse_slots = reuse_slots
         self.policy = policy
+        self.cse = cse
         self.ctx = ctx or ExecutionContext.single_device()
         self._sched_cache = CompileCache(cache_size, name="schedule")
         self._encode_cache = CompileCache(cache_size, name="encode")
         self._encode_jit_cache = CompileCache(cache_size, name="encode_jit")
+        # Cumulative sharing-report totals across every prepared batch.
+        self._nodes_before = 0
+        self._nodes_after = 0
 
     def cache_stats(self) -> Dict[str, Dict[str, float]]:
         """Hit/miss/eviction counters for every signature-keyed cache."""
@@ -106,47 +76,28 @@ class PooledExecutor:
 
     # ------------------------------------------------------------------ prep
     def prepare(self, queries: Sequence[QueryInstance]) -> PreparedBatch:
-        order = np.argsort(np.array([q.pattern for q in queries]), kind="stable")
-        qs = [queries[i] for i in order]
-        dag = build_batched_dag(qs)
-        key = dag.structure_key() + (self.b_max, self.reuse_slots, self.policy)
-
-        cached = self._sched_cache.get(key)
-        if cached is None:
-            sched = schedule(dag, b_max=self.b_max, reuse_slots=self.reuse_slots,
-                             policy=self.policy)
-            trash = sched.padded_slots
-            meta = tuple(s.signature() for s in sched.steps)
-            slot_arrays = [
-                {
-                    "in_slots": _pad2(s.in_slots, s.padded_n, 0),
-                    "out_slots": _pad1(s.out_slots, s.padded_n, trash),
-                }
-                for s in sched.steps
-            ]
-            cached = (sched, meta, slot_arrays, trash)
-            self._sched_cache.put(key, cached)
-        sched, meta, slot_arrays, trash = cached
-
-        bind_arrays = [
-            {
-                "rel_ids": _pad1(dag.rel[s.node_ids].clip(min=0), s.padded_n, 0),
-                "anchor_ids": _pad1(dag.anchor[s.node_ids].clip(min=0), s.padded_n, 0),
-            }
-            for s in sched.steps
-        ]
-        return PreparedBatch(
-            signature=sched.signature() + (self.model.name,),
-            structure_key=key,
-            meta=meta,
-            slot_arrays=slot_arrays,
-            bind_arrays=bind_arrays,
-            answer_slots=sched.answer_slots,
-            n_slots_padded=trash,
-            sched=sched,
-            patterns=dag.patterns,
-            order=order,
+        """Thin wrapper over the plan compiler: canonicalize, CSE-merge
+        shared subqueries (unless ``cse=False``), lower through the
+        Max-Fillness scheduler, memoizing by deduped topology in the
+        executor's schedule cache."""
+        plan = compile_batch(
+            queries, model_name=self.model.name, b_max=self.b_max,
+            reuse_slots=self.reuse_slots, policy=self.policy, cse=self.cse,
+            sched_cache=self._sched_cache,
         )
+        self._nodes_before += plan.report.nodes_before
+        self._nodes_after += plan.report.nodes_after
+        return plan
+
+    def sharing_stats(self) -> Dict[str, float]:
+        """Cumulative CSE effect over every batch this executor prepared."""
+        saved = self._nodes_before - self._nodes_after
+        return {
+            "nodes_before": self._nodes_before,
+            "nodes_after": self._nodes_after,
+            "pooled_rows_saved": saved,
+            "saved_frac": saved / max(self._nodes_before, 1),
+        }
 
     # ---------------------------------------------------------------- encode
     def encode_fn(self, prepared: PreparedBatch):
@@ -241,8 +192,10 @@ class QueryLevelExecutor:
 
     def __init__(self, model, b_max: int = 512, ctx=None):
         self.model = model
+        # cse=False: the baseline frameworks never share work across queries
+        # — leaving CSE on would quietly hand the baseline the paper's win.
         self._inner = PooledExecutor(model, b_max=b_max, reuse_slots=True,
-                                     policy="fifo", ctx=ctx)
+                                     policy="fifo", ctx=ctx, cse=False)
 
     @property
     def ctx(self):
@@ -260,6 +213,9 @@ class QueryLevelExecutor:
 
     def cache_stats(self) -> Dict[str, Dict[str, float]]:
         return self._inner.cache_stats()
+
+    def sharing_stats(self) -> Dict[str, float]:
+        return self._inner.sharing_stats()
 
     def reset_cache_counters(self) -> None:
         self._inner.reset_cache_counters()

@@ -27,13 +27,17 @@ PoolKey = Tuple[int, int]
 
 def bucket_size(n: int, b_max: int) -> int:
     """Pad pool sizes to powers of two (capped at b_max) so the set of
-    schedule signatures — and hence XLA recompiles — stays bounded."""
+    schedule signatures — and hence XLA recompiles — stays bounded. The cap
+    applies to the PADDED size too: with a non-pow2 b_max, a pool of n ≤
+    b_max rows whose next power of two exceeds b_max pads to b_max exactly
+    (padded_n ≥ n always holds because the scheduler never forms a pool
+    larger than b_max)."""
     if n >= b_max:
         return b_max
     p = 1
     while p < n:
         p <<= 1
-    return p
+    return min(p, b_max)
 
 
 @dataclasses.dataclass

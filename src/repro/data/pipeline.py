@@ -131,15 +131,19 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
                       dev_static=None, sem_cache=None,
                       ctx=None) -> "PreparedWorkItem":
     """Run the full host side of one training step: negative-sampling arrays,
-    canonicalization + Algorithm-1 scheduling, and device transfer.
+    plan compilation (canonicalize → CSE → Algorithm-1 lowering, i.e.
+    ``executor.prepare`` returning a ``CompiledPlan``), and device transfer
+    — the scheduler thread ships fully compiled plans, so the main thread
+    only dispatches.
 
     ``dev_static`` (optional, a ``CompileCache``) caches device-resident
-    static slot arrays by STRUCTURE key — they never change between batches
-    with the same pattern multiset, so they transfer once instead of once
-    per step. The structure key is essential: the coarser program signature
-    only encodes bucketed shapes, and two different structures (e.g. 5 vs 6
-    queries padding to the same buckets) may share a signature while having
-    different slot/answer arrays.
+    static slot arrays by STRUCTURE key — under CSE that is the deduped
+    topology, so they never change between batches sharing a post-CSE shape
+    and transfer once instead of once per step. The structure key is
+    essential: the coarser program signature only encodes bucketed shapes,
+    and two different structures (e.g. 5 vs 6 queries padding to the same
+    buckets) may share a signature while having different slot/answer
+    arrays.
 
     ``sem_cache`` (optional, a ``semantic.store.SemanticCache``) is the
     prefetch half of the out-of-core semantic path: the batch's entity-id
@@ -204,7 +208,7 @@ class PreparedWorkItem:
     never touches numpy on the critical path — it just dispatches the jitted
     program."""
 
-    prepared: object            # repro.core.executor.PreparedBatch
+    prepared: object            # repro.core.plan.CompiledPlan
     steps: List[dict]           # device-resident slot/bind arrays per step
     ans: object                 # device answer_slots
     pos: object                 # [B] positives, canonical order (device)

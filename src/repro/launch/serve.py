@@ -101,6 +101,11 @@ def main() -> None:
                          "request before a partial batch dispatches")
     ap.add_argument("--queue-depth", type=int, default=256,
                     help="bounded admission queue (backpressure limit)")
+    ap.add_argument("--no-cse", action="store_true",
+                    help="ablation: disable cross-query subexpression "
+                         "sharing in the plan compiler (duplicate subqueries "
+                         "across co-batched requests are recomputed per "
+                         "request)")
     ap.add_argument("--semantic-store", default=None, metavar="DIR",
                     help="serve out-of-core: H_sem stays on disk; device "
                          "holds only the hot-set cache (built by "
@@ -145,7 +150,7 @@ def main() -> None:
             if cache is not None:
                 cache.reset()  # restored cache buffers: nothing resident yet
 
-    executor = PooledExecutor(model, b_max=256, ctx=ctx)
+    executor = PooledExecutor(model, b_max=256, ctx=ctx, cse=not args.no_cse)
     cfg = ServingConfig(max_batch=args.max_batch,
                         max_wait_ms=args.max_wait_ms,
                         queue_depth=args.queue_depth, top_k=args.top_k)
@@ -174,6 +179,11 @@ def main() -> None:
           f"(mean size {st['mean_batch_size']:.1f}, flushes {st['flushes']}, "
           f"padded rows {st['padded_row_frac']:.1%}), "
           f"{st['retraces']} steady-state retraces")
+    sh = st["sharing"]
+    print(f"plan compiler: CSE {'off' if args.no_cse else 'on'} — "
+          f"{sh['pooled_rows_saved']} pooled rows saved "
+          f"({sh['saved_frac']:.1%}), "
+          f"{st['coalesced']} duplicate requests coalesced")
     print(f"first: {json.dumps(report.results[0])[:140]}...")
     if cache is not None:
         cs = cache.stats()

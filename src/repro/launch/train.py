@@ -83,6 +83,11 @@ def main() -> None:
                          "per-row scales")
     ap.add_argument("--adaptive", action="store_true")
     ap.add_argument("--executor", default="pooled", choices=["pooled", "query_level"])
+    ap.add_argument("--no-cse", action="store_true",
+                    help="ablation: disable the plan compiler's cross-query "
+                         "subexpression sharing (DESIGN.md §Compiler) — "
+                         "every query node becomes its own pooled row, the "
+                         "pre-compiler behavior")
     ap.add_argument("--pipeline", action="store_true",
                     help="pipelined dataflow mode: overlap Algorithm-1 "
                          "scheduling for batch k+1 with device execution of "
@@ -153,6 +158,7 @@ def main() -> None:
         adam=AdamConfig(lr=args.lr), adaptive=args.adaptive,
         executor=args.executor, checkpoint_dir=args.ckpt_dir,
         pipeline=args.pipeline, max_inflight=args.max_inflight,
+        cse=not args.no_cse,
     )
     trainer = NGDBTrainer(model, kg, cfg, semantic_table=table,
                           semantic_cache=cache, ctx=ctx)
@@ -172,6 +178,14 @@ def main() -> None:
     print(f"trained {args.steps} steps [{mode}] in {dt:.1f}s ({qps:.0f} queries/sec)")
     print(f"compile cache: {cc['size']} programs, "
           f"hit rate {cc['hit_rate']:.2%} ({cc['misses']} traces)")
+    sh = trainer.executor.sharing_stats()
+    # Report the executor's ACTUAL mode: the query-level baseline pins CSE
+    # off regardless of the flag (sharing would hand it the pooled win).
+    cse_on = getattr(trainer.executor, "cse", False)
+    print(f"plan compiler: CSE {'on' if cse_on else 'off'}"
+          f"{' (query-level baseline)' if args.executor != 'pooled' else ''}"
+          f" — {sh['pooled_rows_saved']} pooled rows saved "
+          f"({sh['saved_frac']:.1%} of {sh['nodes_before']})")
     if ctx.is_sharded:
         ent = trainer.params["entity"]
         per_dev = ent.addressable_shards[0].data.nbytes

@@ -19,6 +19,12 @@ Pieces:
   thread): it owns the params handle, so semantic-cache staging — the same
   ``plan``/``apply_to`` handshake ``data/pipeline.py`` uses for training —
   needs no cross-thread sequencing.
+* **Cross-request sharing** — exact-duplicate in-flight requests (same
+  ``QueryInstance.key()``) coalesce onto ONE computed row before the batch
+  is padded (``coalesced`` counter in ``stats()``), and the executor's plan
+  compiler (DESIGN.md §Compiler) CSE-merges identical *subtrees* of the
+  distinct queries that remain — duplicate subqueries across concurrent
+  requests are computed once per micro-batch.
 * **Signature-bucketed padding** — micro-batches pad to the next power-of-
   two size by repeating the last query (padded rows are computed and
   discarded). Bounding the batch-size set bounds the jit signature set: the
@@ -48,7 +54,7 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -158,13 +164,17 @@ class _Request:
 @dataclasses.dataclass
 class BatchRecord:
     """One executed micro-batch, for offline-oracle replay: the exact padded
-    composition the engine ran, plus the per-request results (real rows
-    only, submission order)."""
+    composition the engine ran (duplicate in-flight requests coalesce to one
+    computed row first, so ``queries`` holds UNIQUE real rows), plus one
+    result per computed real row, in first-submission order. Each logged
+    row records the selection at the engine's default ``top_k`` whenever any
+    request for that row used it (so fixed-k oracle replay compares
+    row-for-row); rows requested ONLY at custom k carry that k."""
 
-    queries: List[QueryInstance]   # padded composition as executed
-    n_real: int
+    queries: List[QueryInstance]   # padded unique composition as executed
+    n_real: int                    # unique real rows (pre-padding)
     flush: str                     # size | age | drain
-    results: List[Dict]
+    results: List[Dict]            # one per real row
 
 
 class ServingEngine:
@@ -196,6 +206,7 @@ class ServingEngine:
         self.sem_rows_fn = sem_rows_fn
         self._scorer = scorer_for(model, ctx)
         self._scorer_traces0 = self._scorer.traces
+        self._sharing0 = dict(self.executor.sharing_stats())
         self._q: "queue.Queue[_Request]" = queue.Queue(maxsize=self.cfg.queue_depth)
         self._stop = threading.Event()
         self._closed = False
@@ -206,6 +217,7 @@ class ServingEngine:
         self._batches = 0
         self._batch_rows = 0
         self._padded_rows = 0
+        self._coalesced = 0
         self._failures = 0
         self._flushes = {"size": 0, "age": 0, "drain": 0}
         self.batch_log: List[BatchRecord] = []
@@ -366,11 +378,27 @@ class ServingEngine:
             r.future.set_result(res)
 
     def _serve(self, batch: List[_Request], flush: str) -> List[Dict]:
-        queries = [r.query for r in batch]
+        # Exact-duplicate coalescing: in-flight requests whose query keys
+        # match share ONE computed row — encode + all-entity scoring run once
+        # and the result fans out to every waiting future (requests with
+        # different top_k still share the row; only the cheap final selection
+        # differs). Partially overlapping requests are handled one layer
+        # down: the executor's plan compiler CSE-merges shared subtrees of
+        # DISTINCT queries in the same micro-batch.
+        row_of: List[int] = []
+        uniq: List[QueryInstance] = []
+        index: Dict[Tuple, int] = {}
+        for r in batch:
+            key = r.query.key()
+            j = index.get(key)
+            if j is None:
+                j = index[key] = len(uniq)
+                uniq.append(r.query)
+            row_of.append(j)
         if self.cfg.bucket:
-            padded, n_real = pad_to_bucket(queries)
+            padded, n_real = pad_to_bucket(uniq)
         else:
-            padded, n_real = list(queries), len(queries)
+            padded, n_real = list(uniq), len(uniq)
         params = self.params
         if self.sem_cache is not None:
             # Staging folds into the batcher thread: the plan's store read +
@@ -388,36 +416,56 @@ class ServingEngine:
                                                   self.sem_rows_fn)
         else:
             scores = np.asarray(self._scorer(params, states))
-        # Select per DISTINCT k, not one k_max selection sliced per request:
-        # argpartition at k_max can arrange boundary-tied ids differently
-        # than argpartition at k, and the contract is exact per-request
-        # equality with serve_batch(top_k=k). Mixed-k batches are rare, so
-        # this is one topk_desc call in the common case.
-        by_k: Dict[int, List[int]] = {}
+        # Select per DISTINCT (row, k) group, not one k_max selection sliced
+        # per request: argpartition at k_max can arrange boundary-tied ids
+        # differently than argpartition at k, and the contract is exact
+        # per-request equality with serve_batch(top_k=k). Mixed-k batches
+        # are rare, so this is one topk_desc call in the common case.
+        sel_of: Dict[Tuple[int, int], np.ndarray] = {}
         for i, r in enumerate(batch):
-            by_k.setdefault(min(r.top_k, scores.shape[1]), []).append(i)
-        results: List[Optional[Dict]] = [None] * len(batch)
+            sel_of.setdefault((row_of[i], min(r.top_k, scores.shape[1])), None)
+        by_k: Dict[int, List[int]] = {}   # k -> unique computed rows
+        for row, k in sel_of:
+            by_k.setdefault(k, []).append(row)
         for k, rows in by_k.items():
             idx = topk_desc(scores[rows], k)
-            for j, i in enumerate(rows):
-                r = batch[i]
-                sel = idx[j]
-                results[i] = {
-                    "pattern": r.query.pattern,
-                    "anchors": r.query.anchors.tolist(),
-                    "relations": r.query.relations.tolist(),
-                    "top_entities": sel.tolist(),
-                    "scores": scores[i, sel].round(3).tolist(),
-                }
+            for j, row in enumerate(rows):
+                sel_of[(row, k)] = idx[j]
+        results: List[Optional[Dict]] = [None] * len(batch)
+        log_rows: List[Optional[Dict]] = [None] * n_real
+        default_k = min(self.cfg.top_k, scores.shape[1])
+        for i, r in enumerate(batch):
+            row = row_of[i]
+            k = min(r.top_k, scores.shape[1])
+            sel = sel_of[(row, k)]
+            results[i] = {
+                "pattern": r.query.pattern,
+                "anchors": r.query.anchors.tolist(),
+                "relations": r.query.relations.tolist(),
+                "top_entities": sel.tolist(),
+                "scores": scores[row, sel].round(3).tolist(),
+            }
+            # Log rows prefer the engine's default k: offline-oracle replay
+            # (check_against_offline) serves rec.queries at ONE fixed k, so
+            # a coalesced row whose first submitter asked a custom k must
+            # not shadow a co-batched duplicate at the default.
+            if log_rows[row] is None or (
+                    k == default_k
+                    and len(log_rows[row]["top_entities"]) != default_k):
+                log_rows[row] = results[i]
         with self._lock:
             self._batches += 1
             self._batch_rows += len(padded)
             self._padded_rows += len(padded) - n_real
+            self._coalesced += len(batch) - len(uniq)
             self._flushes[flush] = self._flushes.get(flush, 0) + 1
             if self.cfg.record_batches:
+                # The log holds the UNIQUE composition as executed (one
+                # result per computed row), so offline-oracle replay compares
+                # row-for-row against serve_batch on the same composition.
                 self.batch_log.append(BatchRecord(
                     queries=padded, n_real=n_real, flush=flush,
-                    results=results))
+                    results=log_rows))
         return results
 
     # -------------------------------------------------------------- metrics
@@ -437,9 +485,11 @@ class ServingEngine:
         programs and cache contents are kept."""
         self.executor.reset_cache_counters()
         self._scorer_traces0 = self._scorer.traces
+        self._sharing0 = dict(self.executor.sharing_stats())
         with self._lock:
             self._lat_ms.clear()
             self._batches = self._batch_rows = self._padded_rows = 0
+            self._coalesced = 0
             self._failures = 0
             self._flushes = {"size": 0, "age": 0, "drain": 0}
             if clear_log:
@@ -458,6 +508,9 @@ class ServingEngine:
                                     if self._batches else 0.0),
                 "padded_row_frac": (self._padded_rows / self._batch_rows
                                     if self._batch_rows else 0.0),
+                # duplicate in-flight requests served off a co-batched twin's
+                # computation (same QueryInstance.key())
+                "coalesced": self._coalesced,
             }
         if len(lat):
             from repro.serving.loadgen import latency_summary
@@ -466,6 +519,17 @@ class ServingEngine:
                                  "max": float(lat.max())}
         out["retraces"] = self.retraces()
         out["caches"] = self.executor.cache_stats()
+        # Same window as the engine's own counters: delta since the last
+        # reset_counters(), not the executor's lifetime totals.
+        sh = self.executor.sharing_stats()
+        before = sh["nodes_before"] - self._sharing0["nodes_before"]
+        after = sh["nodes_after"] - self._sharing0["nodes_after"]
+        out["sharing"] = {
+            "nodes_before": before,
+            "nodes_after": after,
+            "pooled_rows_saved": before - after,
+            "saved_frac": (before - after) / max(before, 1),
+        }
         out["scorer_traces"] = self._scorer.traces - self._scorer_traces0
         if self.sem_cache is not None:
             out["sem_cache"] = self.sem_cache.stats()

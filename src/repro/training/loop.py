@@ -30,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compile_cache import CompileCache
-from repro.core.executor import PooledExecutor, PreparedBatch, QueryLevelExecutor
+from repro.core.executor import PooledExecutor, QueryLevelExecutor
+from repro.core.plan import CompiledPlan
 from repro.data.pipeline import batch_entity_ids
 from repro.core.patterns import TEMPLATES
 from repro.sampling.adaptive import AdaptiveDistribution, pattern_losses_from_batch
@@ -57,6 +58,8 @@ class TrainConfig:
     max_inflight: int = 2           # pipelined: bounded dispatch window
     compile_cache_size: int = 128   # LRU capacity for jitted step programs
     gil_switch_interval: float = 2e-3  # pipelined: bound GIL handoff latency
+    cse: bool = True                # cross-query subexpression sharing
+    #                                 (False = --no-cse ablation baseline)
 
 
 class NGDBTrainer:
@@ -75,7 +78,7 @@ class NGDBTrainer:
         if cfg.executor == "pooled":
             self.executor = PooledExecutor(model, b_max=cfg.b_max,
                                            cache_size=cfg.compile_cache_size,
-                                           ctx=self.ctx)
+                                           ctx=self.ctx, cse=cfg.cse)
         else:
             self.executor = QueryLevelExecutor(model, b_max=cfg.b_max,
                                                ctx=self.ctx)
@@ -115,13 +118,19 @@ class NGDBTrainer:
         frozen = {k: v for k, v in params.items() if k in frozen_names}
         return trainable, frozen
 
-    def _train_fn(self, prepared: PreparedBatch, example=None):
+    def _train_fn(self, prepared: CompiledPlan, example=None):
         """Jitted fused step for ``prepared``'s signature. ``example`` is the
         (steps, ans, pos, neg) the step will be called with — under a mesh
         context their SHAPES pick the batch in_shardings, so the program is
         compiled against exactly the layout the pipeline stages arrays into
         (signature-keyed cache: same signature ⇒ same bucketed shapes ⇒ same
-        shardings, so the example never fragments the cache)."""
+        shardings, so the example never fragments the cache).
+
+        The loss consumes the plan's per-query answer map (``ans_slots``):
+        with CSE, queries sharing their full tree alias the same workspace
+        row, the encode-final gather fans that row out per query, and
+        reverse-mode AD sums the per-query cotangents into the shared node —
+        gradients through shared subexpressions need no special handling."""
         sig = prepared.signature
         fn = self._train_fns.get(sig)
         if fn is not None:

@@ -266,6 +266,47 @@ def test_bubble_fraction():
 
 
 @pytest.mark.slow
+def test_cse_encode_parity_under_mesh_subprocess():
+    """Plan-compiler CSE under a data-sharded mesh: the deduped plan's
+    workspace must stay DP-aligned (rows round up to the data ways even
+    after CSE shrinks peak slots), and encode must equal the no-CSE path
+    bitwise on the same mesh."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, "src")
+import jax, numpy as np
+from repro.core import PooledExecutor
+from repro.core.patterns import QueryInstance
+from repro.distributed.context import make_execution_context
+from repro.models import ModelConfig, make_model
+
+ctx = make_execution_context("data=4", profile="fsdp")
+model = make_model("gqe", ModelConfig(dim=8, entity_pad=4))
+params = model.init_params(jax.random.PRNGKey(0), 40, 6, ctx=ctx)
+rng = np.random.default_rng(5)
+anchors, rels = rng.integers(0, 40, 5), rng.integers(0, 6, 3)
+queries = []
+for pat, na, nr in [("2p", 1, 2), ("3p", 1, 3), ("1p", 1, 1), ("ip", 2, 3),
+                    ("pi", 2, 3), ("2p", 1, 2), ("1p", 1, 1)]:
+    queries.append(QueryInstance(
+        pat, anchors[rng.integers(5, size=na)].copy(),
+        rels[rng.integers(3, size=nr)].copy()))
+queries += queries[:3]  # exact duplicates across the batch
+ex_on = PooledExecutor(model, b_max=8, ctx=ctx, cse=True)
+ex_off = PooledExecutor(model, b_max=8, ctx=ctx, cse=False)
+p_on = ex_on.prepare(queries)
+assert p_on.report.pooled_rows_saved > 0, p_on.report
+a = np.asarray(ex_on.encode(params, queries, compiled=True))
+b = np.asarray(ex_off.encode(params, queries, compiled=True))
+print("OK", bool(np.array_equal(a, b)))
+"""
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=300, cwd=".")
+    assert "OK True" in r.stdout, (r.stdout, r.stderr[-2000:])
+
+
+@pytest.mark.slow
 def test_spmd_16dev_subprocess():
     """End-to-end SPMD on 16 placeholder devices: per-device flops scale and
     train step lowers+compiles with the production sharding rules."""

@@ -90,6 +90,55 @@ def test_bucket_size():
     assert bucket_size(0, 512) == 1
 
 
+def test_bucket_size_boundaries():
+    """n=0, n=b_max and non-pow2 b_max: the pow2 padding must respect the
+    b_max cap (a padded size above b_max would desync slot-array padding
+    from the pools the scheduler actually forms)."""
+    # exact boundary: n == b_max for every b_max, pow2 or not
+    for b in (1, 6, 16, 100, 512):
+        assert bucket_size(b, b) == b
+        assert bucket_size(b + 1, b) == b
+        assert bucket_size(0, b) == 1
+    # non-pow2 cap: next pow2 would overshoot the cap
+    assert bucket_size(5, 6) == 6
+    assert bucket_size(3, 6) == 4
+    assert bucket_size(65, 100) == 100
+    assert bucket_size(64, 100) == 64
+    # padded size always covers the real rows
+    for b in (1, 3, 6, 7, 100):
+        for n in range(0, b + 2):
+            assert n <= bucket_size(n, b) or n > b
+
+
+def test_schedule_valid_with_non_pow2_b_max(mixed_queries):
+    """Schedules stay executable (deps + slot liveness) when b_max is not a
+    power of two, including b_max=1 (every pool a singleton)."""
+    dag = build_batched_dag([b.query for b in mixed_queries])
+    for b_max in (1, 3, 6, 7):
+        sched = schedule(dag, b_max=b_max)
+        assert all(s.n <= b_max for s in sched.steps)
+        assert all(s.padded_n <= b_max or s.padded_n == 1 for s in sched.steps)
+        _simulate(dag, sched)
+
+
+def test_slot_allocator_reuses_lowest_free_slot_first():
+    """The free list is a min-heap: reclaimed slots come back lowest-id
+    first, so workspace rows stay dense and the peak never grows while any
+    freed slot remains."""
+    from repro.core.scheduler import _SlotAllocator
+
+    a = _SlotAllocator()
+    assert [a.alloc() for _ in range(8)] == list(range(8))
+    assert a.peak == 8
+    a.release(5)
+    a.release(2)
+    a.release(7)
+    assert [a.alloc(), a.alloc(), a.alloc()] == [2, 5, 7]
+    assert a.peak == 8          # reuse never bumps the peak
+    assert a.alloc() == 8       # free list drained -> fresh slot
+    assert a.peak == 9
+
+
 def test_b_max_respected(mixed_queries):
     dag = build_batched_dag([b.query for b in mixed_queries] * 8)
     sched = schedule(dag, b_max=16)
