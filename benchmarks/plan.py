@@ -20,8 +20,17 @@ invariants (DESIGN.md §Compiler):
 * **zero steady-state retraces** — after a warmup pass, replaying the
   workload compiles nothing: schedule/encode/train-step caches all hit
   (the deduped-topology structure key is replay-stable);
-* **throughput** — sync and pipelined queries/sec, CSE on vs off (sharing
-  shrinks pooled rows, so on-throughput ≥ off is expected but machine-dep).
+* **plan-cache reuse** — the cross-batch ``PlanCache`` turns every replayed
+  batch into one dict lookup: steady-state hit rate ≥ 90% and ZERO
+  canonicalize calls (compile cost is a warmup-only line item);
+* **throughput** — steady-state sync and pipelined queries/sec, CSE on vs
+  off, with one-time compile cost reported separately as ``compile_ms``.
+  With plans cached across batches the per-batch host cost is identical
+  for both modes, so the device-side row savings must win:
+  ``cse_dominates`` asserts CSE-on QPS ≥ CSE-off in BOTH modes;
+* **serving reuse** — a duplicate-heavy engine replay with a
+  ``MaterializedSubqueryCache``: steady state serves encoded rows from
+  cache (hit rate ≥ 90%, zero retraces).
 
 The summary lands in ``BENCH_plan.json`` at the repo root (committed, so the
 compiler perf trajectory accumulates across PRs); any violated invariant
@@ -91,8 +100,8 @@ def make_overlap_batches(kg, n_batches: int, batch_size: int, seed: int = 13):
     return batches
 
 
-def run(steps: int = 8, batch: int = 64, dim: int = 16,
-        dataset: str = "FB15k", loss_steps: int = 5, trials: int = 2,
+def run(steps: int = 8, batch: int = 128, dim: int = 64,
+        dataset: str = "FB15k", loss_steps: int = 5, trials: int = 8,
         out_path: str = _DEFAULT_OUT) -> dict:
     summary = {"ok": False, "suite": "plan", "dataset": dataset,
                "failures": []}
@@ -193,24 +202,37 @@ def _run_inner(summary, steps, batch, dim, dataset, loss_steps, trials):
         return lambda: next(it)
 
     trainers = {}
+    summary["compile_ms"] = {}
     for cse in (True, False):
         for mode in ("sync", "pipelined"):
+            tag = f"{mode}_{'cse' if cse else 'nocse'}"
             tr = _make_trainer("gqe", kg, dim, batch, cse=cse,
                                pipeline=(mode == "pipelined"))
+            t0 = time.perf_counter()
             tr.train(steps, log_every=0, batches=stream())  # warm signatures
+            # One-time cost: tracing/compiling every signature plus the
+            # first canonicalize+hash-cons per batch. Reported separately
+            # so steady-state QPS below measures the replay loop only.
+            summary["compile_ms"][tag] = round(
+                1e3 * (time.perf_counter() - t0), 1)
             tr._train_fns.reset_counters()
             tr.executor.reset_cache_counters()
             trainers[(cse, mode)] = tr
 
     best = {k: float("inf") for k in trainers}
-    for _ in range(max(trials, 1)):
-        # interleaved so machine-speed drift hits every engine equally
-        for key, tr in trainers.items():
+    keys = list(trainers)
+    for t in range(max(trials, 1)):
+        # Interleaved AND rotated: machine-speed drift hits every engine
+        # equally, and no engine is systematically first (the first-timed
+        # engine eats cold-cache/frequency effects every trial otherwise —
+        # at a ~4% CSE win that bias alone can flip the verdict).
+        for key in keys[t % len(keys):] + keys[:t % len(keys)]:
             t0 = time.perf_counter()
-            tr.train(steps, log_every=0, batches=stream())
+            trainers[key].train(steps, log_every=0, batches=stream())
             best[key] = min(best[key], time.perf_counter() - t0)
 
     summary["qps"] = {}
+    summary["plan_cache_hit_rate"] = {}
     retraces = 0
     for (cse, mode), tr in trainers.items():
         tag = f"{mode}_{'cse' if cse else 'nocse'}"
@@ -221,24 +243,96 @@ def _run_inner(summary, steps, batch, dim, dataset, loss_steps, trials):
                   + sum(int(cs[k]["misses"])
                         for k in ("schedule", "encode", "encode_jit")))
         retraces += misses
+        pc = tr.executor.sharing_stats()["plan_cache"]
+        summary["plan_cache_hit_rate"][tag] = round(pc["hit_rate"], 4)
         emit(f"plan/{dataset}/{tag}_qps", 1e6 * best[(cse, mode)] / steps,
-             f"qps={qps:.0f} retraces={misses}")
+             f"qps={qps:.0f} retraces={misses} "
+             f"plan_hits={pc['hit_rate']:.0%}")
         if misses:
             summary["failures"].append(
                 f"{tag}: {misses} steady-state retraces on the replayed "
                 f"workload — the deduped-topology key is not replay-stable")
+        if pc["hit_rate"] < 0.9:
+            summary["failures"].append(
+                f"{tag}: steady-state plan-cache hit rate "
+                f"{pc['hit_rate']:.1%} < 90% on an exact replay")
+        if pc["canonicalize_calls"] != 0:
+            summary["failures"].append(
+                f"{tag}: {pc['canonicalize_calls']} canonicalize calls in "
+                f"steady state — exact-key plan hits must skip "
+                f"canonicalization entirely")
     summary["steady_state_retraces"] = retraces
     on, off = summary["qps"]["sync_cse"], summary["qps"]["sync_nocse"]
     emit(f"plan/{dataset}/sync_speedup", 0.0, f"x{on / max(off, 1e-9):.2f}")
+    # With plans cached, CSE's per-batch host cost matches no-CSE (one dict
+    # lookup each) and the device step runs strictly fewer pooled rows —
+    # steady-state throughput must not regress in EITHER mode.
+    dominates = (summary["qps"]["sync_cse"] >= summary["qps"]["sync_nocse"]
+                 and summary["qps"]["pipelined_cse"]
+                 >= summary["qps"]["pipelined_nocse"])
+    summary["cse_dominates"] = dominates
+    if not dominates:
+        summary["failures"].append(
+            f"CSE does not dominate in steady state: {summary['qps']}")
+
+    _serving_replay(summary, kg, dataset, batch)
+
+
+def _serving_replay(summary, kg, dataset, batch):
+    """Duplicate-heavy engine replay: the batcher consults the materialized
+    cache before padding, so steady-state traffic skips encode entirely."""
+    import jax
+
+    from repro.core import MaterializedSubqueryCache, PooledExecutor
+    from repro.serving import (ServingConfig, ServingEngine, make_workload,
+                               run_closed_loop)
+
+    model = make_model("gqe", ModelConfig(dim=16, gamma=6.0))
+    params = model.init_params(jax.random.PRNGKey(0), kg.n_entities,
+                               kg.n_relations)
+    executor = PooledExecutor(model, b_max=128)
+    mat = MaterializedSubqueryCache(4 * batch)
+    mat.watch_kg(kg)
+    engine = ServingEngine(model, params, executor=executor,
+                           cfg=ServingConfig(max_batch=16), mat_cache=mat)
+    try:
+        uniq = make_workload(kg, 32, seed=7)
+        workload = [uniq[i % len(uniq)] for i in range(4 * len(uniq))]
+        run_closed_loop(engine, workload, concurrency=16)  # warm + fill
+        engine.reset_counters()
+        t0 = time.perf_counter()
+        run_closed_loop(engine, workload, concurrency=16)
+        dt = time.perf_counter() - t0
+        st = engine.stats()
+        mc, rt = st["mat_cache"], int(st["retraces"])
+        summary["serving"] = {
+            "qps": round(len(workload) / dt, 1),
+            "mat_hit_rate": round(mc["hit_rate"], 4),
+            "coalesced": int(st["coalesced"]),
+            "retraces": rt,
+        }
+        emit(f"plan/{dataset}/serving_replay", 1e6 * dt / len(workload),
+             f"qps={summary['serving']['qps']:.0f} "
+             f"mat_hits={mc['hit_rate']:.0%} retraces={rt}")
+        if mc["hit_rate"] < 0.9:
+            summary["failures"].append(
+                f"serving replay: materialized hit rate "
+                f"{mc['hit_rate']:.1%} < 90% on duplicate-heavy traffic")
+        if rt:
+            summary["failures"].append(
+                f"serving replay: {rt} steady-state retraces with the "
+                f"materialized cache attached")
+    finally:
+        engine.close()
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--loss-steps", type=int, default=5)
-    ap.add_argument("--trials", type=int, default=2)
+    ap.add_argument("--trials", type=int, default=8)
     ap.add_argument("--dataset", default="FB15k")
     args = ap.parse_args()
     run(steps=args.steps, batch=args.batch, dim=args.dim,

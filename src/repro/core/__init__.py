@@ -1,6 +1,7 @@
 # The paper's primary contribution: operator-level batched training.
 from repro.core.compile_cache import CompileCache
-from repro.core.compiler import build_plan, compile_batch, plan_to_dag
+from repro.core.compiler import PlanCache, build_plan, compile_batch, plan_to_dag
+from repro.core.matcache import MaterializedSubqueryCache
 from repro.core.executor import PooledExecutor, PreparedBatch, QueryLevelExecutor
 from repro.core.ops import OpType
 from repro.core.plan import CompiledPlan, PlanGraph, PlanNode, SharingReport
@@ -39,4 +40,6 @@ __all__ = [
     "compile_batch",
     "plan_to_dag",
     "CompileCache",
+    "PlanCache",
+    "MaterializedSubqueryCache",
 ]

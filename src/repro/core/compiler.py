@@ -28,9 +28,18 @@ full-key sort instead of pattern-only — so two same-pattern queries may
 swap batch rows relative to pre-compiler runs (the per-query loss MEAN can
 reassociate by ulps vs old recorded curves, while CSE-on vs CSE-off inside
 this engine compare bitwise, both using the same order).
+
+``PlanCache`` makes the whole pipeline above CROSS-BATCH: a repeated batch
+(exact query-key tuple) skips steps 1-3 entirely, and a permutation of a
+seen batch skips 2-3 — which is what finally takes the per-batch host
+compile cost off the steady-state hot path (the CSE throughput regression
+BENCH_plan.json used to record).
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -159,6 +168,123 @@ class _BindPlan:
         ]
 
 
+class PlanCache:
+    """Cross-batch compiled-plan cache (DESIGN.md §Compiler, cross-batch).
+
+    The PR-5 compiler memoized the *schedule* by deduped topology but still
+    paid canonicalize + hash-consing + bind gathers on the host for EVERY
+    batch — enough to lose the device win CSE buys at small dims. This cache
+    persists whole ``CompiledPlan`` artifacts across ``compile_batch`` calls,
+    at two levels (both bounded LRU, one lock):
+
+    * **exact** — keyed by the submission-order tuple of full query keys
+      (plus the compile config). A hit skips everything: no canonicalize
+      sort, no IR rebuild, no bind gathers — one dict lookup returns the
+      previously compiled plan verbatim (same ``order``, so every downstream
+      permutation is valid too).
+    * **canonical** — keyed by the canonically sorted key tuple. A batch
+      that is a permutation of a seen one hits here after paying only the
+      canonicalize sort; the cached plan is reused with the new ``order``
+      (everything else in a ``CompiledPlan`` is canonical-order data, so the
+      arrays are shared, not copied).
+
+    ``canonicalize_calls`` counts how often the canonicalize sort actually
+    ran — the regression surface for "exact hit = one dict lookup": it must
+    NOT grow on exact hits. Plans are immutable-by-convention; entries are
+    never invalidated (a plan depends only on the query keys and compile
+    config, never on params or the KG), which is exactly why this cache
+    needs no version stamp while ``MaterializedSubqueryCache`` does.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        # Exact entries are cheap aliases (they share the canonical entry's
+        # arrays), so the exact level gets 4x the canonical budget: many
+        # submission orders of few canonical batches is the common shape.
+        self._exact: "collections.OrderedDict" = collections.OrderedDict()
+        self._canon: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.canonicalize_calls = 0
+
+    def _put(self, d, key, value, cap) -> None:
+        d[key] = value
+        d.move_to_end(key)
+        while len(d) > cap:
+            d.popitem(last=False)
+            self.evictions += 1
+
+    # ``compile_batch`` drives the two-level probe: ``get_exact`` counts only
+    # hits (an exact miss falls through to the canonical probe, which settles
+    # the lookup as hit or miss), and the canonicalize counter bumps exactly
+    # when the sort ran — i.e. on every path past the exact level.
+    def get_exact(self, key) -> Optional[CompiledPlan]:
+        with self._lock:
+            plan = self._exact.get(key)
+            if plan is not None:
+                self._exact.move_to_end(key)
+                self.hits += 1
+            return plan
+
+    def get_canonical(self, key) -> Optional[CompiledPlan]:
+        with self._lock:
+            self.canonicalize_calls += 1
+            plan = self._canon.get(key)
+            if plan is not None:
+                self._canon.move_to_end(key)
+                self.hits += 1
+            else:
+                self.misses += 1
+            return plan
+
+    def put_exact(self, key, plan: CompiledPlan) -> CompiledPlan:
+        with self._lock:
+            self._put(self._exact, key, plan, 4 * self.capacity)
+        return plan
+
+    def put(self, exact_key, canon_key, plan: CompiledPlan) -> CompiledPlan:
+        with self._lock:
+            self._put(self._canon, canon_key, plan, self.capacity)
+            self._put(self._exact, exact_key, plan, 4 * self.capacity)
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._canon)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "name": "plan",
+                "size": len(self._canon),
+                "exact_size": len(self._exact),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hit_rate,
+                "canonicalize_calls": self.canonicalize_calls,
+            }
+
+    def reset_counters(self) -> None:
+        with self._lock:
+            self.hits = self.misses = self.evictions = 0
+            self.canonicalize_calls = 0
+
+    def clear(self) -> None:
+        with self._lock:
+            self._exact.clear()
+            self._canon.clear()
+
+
 def compile_batch(
     queries: Sequence[QueryInstance],
     *,
@@ -168,16 +294,35 @@ def compile_batch(
     policy: str = "max_fillness",
     cse: bool = True,
     sched_cache=None,
+    plan_cache: Optional[PlanCache] = None,
 ) -> CompiledPlan:
     """Compile one query batch into a ``CompiledPlan``.
 
     ``sched_cache`` (a ``CompileCache``) memoizes the expensive half —
     Algorithm-1 scheduling, slot-array padding and the bind index plan — by
-    ``structure_key``; a hit leaves only the two bind gathers per batch."""
+    ``structure_key``; a hit leaves only the two bind gathers per batch.
+    ``plan_cache`` (a ``PlanCache``) sits in front of ALL of that: a batch
+    whose exact query-key tuple was compiled before returns its plan with
+    zero host work beyond building the key tuple."""
+    cfg_key = (model_name, b_max, reuse_slots, policy, cse)
+    exact_key = None
+    if plan_cache is not None:
+        exact_key = (tuple(q.key() for q in queries), cfg_key)
+        plan = plan_cache.get_exact(exact_key)
+        if plan is not None:
+            return plan
     order = np.asarray(
         sorted(range(len(queries)), key=lambda i: queries[i].key()),
         dtype=np.int64)
     qs = [queries[i] for i in order]
+    canon_key = None
+    if plan_cache is not None:
+        canon_key = (tuple(q.key() for q in qs), cfg_key)
+        skel = plan_cache.get_canonical(canon_key)
+        if skel is not None:
+            plan = (skel if np.array_equal(skel.order, order)
+                    else dataclasses.replace(skel, order=order))
+            return plan_cache.put_exact(exact_key, plan)
 
     if cse:
         plan = build_plan(qs)
@@ -220,7 +365,7 @@ def compile_batch(
             sched_cache.put(key, cached)
     sched, meta, slot_arrays, trash, bind_plan = cached
 
-    return CompiledPlan(
+    out = CompiledPlan(
         signature=sched.signature() + (model_name,),
         structure_key=key,
         meta=meta,
@@ -233,3 +378,6 @@ def compile_batch(
         order=order,
         report=report,
     )
+    if plan_cache is not None:
+        plan_cache.put(exact_key, canon_key, out)
+    return out

@@ -16,14 +16,15 @@ only rebinds anchor/relation ids, and shared subtrees are computed once for
 every query that consumes them."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+import threading
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compile_cache import CompileCache
-from repro.core.compiler import compile_batch
+from repro.core.compiler import PlanCache, compile_batch
 from repro.core.ops import OpType
 from repro.core.patterns import QueryInstance
 from repro.core.plan import CompiledPlan
@@ -45,7 +46,8 @@ class PooledExecutor:
 
     def __init__(self, model, b_max: int = 512, reuse_slots: bool = True,
                  policy: str = "max_fillness", cache_size: int = 128,
-                 ctx=None, cse: bool = True):
+                 ctx=None, cse: bool = True, plan_cache: Optional[PlanCache] = None,
+                 plan_cache_size: int = 512, mat_cache=None):
         from repro.distributed.context import ExecutionContext
 
         self.model = model
@@ -57,12 +59,25 @@ class PooledExecutor:
         self._sched_cache = CompileCache(cache_size, name="schedule")
         self._encode_cache = CompileCache(cache_size, name="encode")
         self._encode_jit_cache = CompileCache(cache_size, name="encode_jit")
+        # Cross-batch plan cache (DESIGN.md §Compiler): persists compiled
+        # plans across prepare() calls so a repeated batch is one dict
+        # lookup, no canonicalize/hash-cons/bind work. Always on — plans
+        # never go stale (keyed on query keys + compile config only).
+        self._plan_cache = plan_cache or PlanCache(plan_cache_size)
+        # Optional materialized-row cache consulted by encode() (inference
+        # paths only; the fused train step's encode closure never sees it —
+        # a constant row inside grad would detach its subtree's gradient).
+        self.mat_cache = mat_cache
         # Cumulative sharing-report totals across every prepared batch.
         self._nodes_before = 0
         self._nodes_after = 0
+        self._stats_lock = threading.Lock()
 
     def cache_stats(self) -> Dict[str, Dict[str, float]]:
-        """Hit/miss/eviction counters for every signature-keyed cache."""
+        """Hit/miss/eviction counters for every SIGNATURE-keyed cache — the
+        set whose misses define ``retraces``. The plan cache is deliberately
+        absent: a plan-cache miss on fresh traffic re-runs host hash-consing
+        but compiles nothing (its counters live in ``sharing_stats``)."""
         return {"schedule": self._sched_cache.stats(),
                 "encode": self._encode_cache.stats(),
                 "encode_jit": self._encode_jit_cache.stats()}
@@ -71,8 +86,10 @@ class PooledExecutor:
         """Zero counters on every cache (contents kept) — e.g. after serving
         warmup so steady-state retraces are measured over traffic only."""
         for c in (self._sched_cache, self._encode_cache,
-                  self._encode_jit_cache):
+                  self._encode_jit_cache, self._plan_cache):
             c.reset_counters()
+        if self.mat_cache is not None:
+            self.mat_cache.reset_counters()
 
     # ------------------------------------------------------------------ prep
     def prepare(self, queries: Sequence[QueryInstance]) -> PreparedBatch:
@@ -83,21 +100,31 @@ class PooledExecutor:
         plan = compile_batch(
             queries, model_name=self.model.name, b_max=self.b_max,
             reuse_slots=self.reuse_slots, policy=self.policy, cse=self.cse,
-            sched_cache=self._sched_cache,
+            sched_cache=self._sched_cache, plan_cache=self._plan_cache,
         )
-        self._nodes_before += plan.report.nodes_before
-        self._nodes_after += plan.report.nodes_after
+        with self._stats_lock:
+            self._nodes_before += plan.report.nodes_before
+            self._nodes_after += plan.report.nodes_after
         return plan
 
-    def sharing_stats(self) -> Dict[str, float]:
-        """Cumulative CSE effect over every batch this executor prepared."""
-        saved = self._nodes_before - self._nodes_after
-        return {
-            "nodes_before": self._nodes_before,
-            "nodes_after": self._nodes_after,
+    def sharing_stats(self) -> Dict:
+        """Cumulative CSE effect over every batch this executor prepared,
+        plus the cross-batch reuse counters: ``plan_cache`` (compiled-plan
+        hits/misses/canonicalize_calls) and, when attached, ``materialized``
+        (encoded-row hits/misses/invalidations)."""
+        with self._stats_lock:
+            before, after = self._nodes_before, self._nodes_after
+        saved = before - after
+        out = {
+            "nodes_before": before,
+            "nodes_after": after,
             "pooled_rows_saved": saved,
-            "saved_frac": saved / max(self._nodes_before, 1),
+            "saved_frac": saved / max(before, 1),
+            "plan_cache": self._plan_cache.stats(),
         }
+        if self.mat_cache is not None:
+            out["materialized"] = self.mat_cache.stats()
+        return out
 
     # ---------------------------------------------------------------- encode
     def encode_fn(self, prepared: PreparedBatch):
@@ -167,7 +194,43 @@ class PooledExecutor:
         bit-for-bit the historical behavior. ``compiled=True`` routes through
         the per-signature jitted program (``encode_fn_compiled``) — the
         serving path, where the whole-batch program amortizes to zero
-        retraces in steady state."""
+        retraces in steady state.
+
+        With a ``mat_cache`` attached, rows cached at the CURRENT version
+        are served without touching the device and only the miss subset is
+        encoded (then inserted back). Pooled operators are row-wise and
+        composition-independent, so subset encode rows are bitwise the rows
+        the full batch would have produced — cache on/off is invisible
+        GIVEN the version discipline (callers bump on every param update)."""
+        cache = self.mat_cache
+        if cache is None or len(queries) == 0:
+            return self._encode_fresh(params, queries, compiled)
+        keys = [q.key() for q in queries]
+        ver = cache.version
+        rows = cache.lookup(keys, version=ver)
+        if len(rows) == len(queries):
+            return jnp.asarray(
+                np.stack([rows[i] for i in range(len(queries))]))
+        miss = [i for i in range(len(queries)) if i not in rows]
+        sub = [queries[i] for i in miss]
+        if compiled and len(sub) > 1:
+            # Pad the miss subset to pow2 (repeat last) so varying hit
+            # counts cannot grow the jitted-encode signature set beyond
+            # what cache-off traffic produces; padded rows are discarded.
+            b = 1 << (len(sub) - 1).bit_length()
+            sub = sub + [sub[-1]] * (b - len(sub))
+        fresh = np.asarray(
+            self._encode_fresh(params, sub, compiled))[: len(miss)]
+        cache.insert([keys[i] for i in miss], fresh, version=ver)
+        out = np.empty((len(queries), fresh.shape[1]), dtype=fresh.dtype)
+        for j, i in enumerate(miss):
+            out[i] = fresh[j]
+        for i, r in rows.items():
+            out[i] = r
+        return jnp.asarray(out)
+
+    def _encode_fresh(self, params, queries: Sequence[QueryInstance],
+                      compiled: bool) -> jnp.ndarray:
         prepared = self.prepare(queries)
         steps, ans = prepared.device_args()
         fn = (self.encode_fn_compiled(prepared) if compiled

@@ -1,0 +1,246 @@
+"""Materialized-subquery cache: encoded pooled rows persisted across batches.
+
+The plan cache (``core/compiler.py::PlanCache``) removes the host-side
+compile cost of a repeated subquery; this module removes the DEVICE cost.
+A ``MaterializedSubqueryCache`` holds the encoded answer rows of hot queries
+keyed by ``QueryInstance.key()`` in a bounded host buffer with CLOCK
+(second-chance) eviction — the same slot/owner/ref discipline as
+``semantic/store.py::SemanticCache`` — so a duplicate query arriving in a
+LATER batch is served off its cached row instead of re-encoded.
+
+Correctness is entirely an invalidation story, and the invalidation is a
+single version stamp:
+
+* every row is stamped with the cache ``version`` it was computed under;
+* ``bump_version`` is O(1) — it increments the version, so every resident
+  row becomes unservable at once (stale slots are reclaimed first by the
+  CLOCK sweep, never returned by ``lookup``);
+* the stamp bumps on every **param update** (the trainer after each Adam
+  step, the serving engine on ``update_params``) and on every **KG/store
+  write** (``KnowledgeGraph.add_triples`` notifies listeners registered via
+  ``watch_kg``);
+* consumers may PIN the version they paired with a params snapshot
+  (``version=`` on ``lookup``/``insert``): a lookup serves only rows
+  stamped exactly that version, and an insert of rows computed under a
+  pinned version is silently DROPPED when the cache has moved on
+  (``stale_drops``) — this closes the race where a batch encodes under old
+  params while an update lands concurrently.
+
+Why cached rows are exempt from the compiler's grad-reassociation ulp
+caveat (DESIGN.md §Compiler): materialized rows are consumed on INFERENCE
+paths only (``PooledExecutor.encode``, the serving batcher) — never inside
+the fused train step, where a constant row would silently detach the
+gradient of its subtree. Within one params version, pooled operators are
+row-wise and composition-independent, so a cached row is bitwise the row a
+fresh no-cache compute would produce; across param updates the version
+stamp forbids reuse. There is no cross-step accumulation to reassociate.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class MaterializedSubqueryCache:
+    """Bounded, version-stamped cache of encoded query rows.
+
+    Thread-safe: the serving batcher, the pipeline scheduler thread and
+    trainer/eval callers share one instance. All buffer reads/writes happen
+    under the lock; ``lookup`` returns row COPIES so a slot reused by a
+    concurrent insert can never tear a row a caller already holds.
+    """
+
+    def __init__(self, budget_rows: int, name: str = "materialized"):
+        if budget_rows < 1:
+            raise ValueError(f"budget_rows must be >= 1, got {budget_rows}")
+        self.budget_rows = budget_rows
+        self.name = name
+        self._lock = threading.Lock()
+        self._version = 0
+        self._buf: Optional[np.ndarray] = None     # [budget, dim], lazy
+        self._slot_of: Dict[Tuple, int] = {}       # key -> slot
+        self._owner: List[Optional[Tuple]] = [None] * budget_rows
+        self._stamp = np.full(budget_rows, -1, dtype=np.int64)
+        self._ref = np.zeros(budget_rows, dtype=bool)
+        self._hand = 0
+        self.hits = 0
+        self.misses = 0
+        self.probe_hits = 0
+        self.probe_misses = 0
+        self.inserts = 0
+        self.evictions = 0
+        self.invalidations = 0
+        self.stale_drops = 0
+        self._inval_reasons: Dict[str, int] = {}
+
+    # -------------------------------------------------------------- version
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def bump_version(self, reason: str = "param_update") -> int:
+        """O(1) whole-cache invalidation: every resident row's stamp no
+        longer matches, so nothing encoded before this call can be served
+        at the new version."""
+        with self._lock:
+            self._version += 1
+            self.invalidations += 1
+            self._inval_reasons[reason] = self._inval_reasons.get(reason, 0) + 1
+            return self._version
+
+    def watch_kg(self, kg) -> None:
+        """Subscribe to KG writes: ``KnowledgeGraph.add_triples`` calls the
+        listener with reason ``"kg_write"``, bumping the version stamp."""
+        kg.add_invalidation_listener(self.bump_version)
+
+    # --------------------------------------------------------------- access
+    def lookup(self, keys: Sequence[Tuple], version: Optional[int] = None
+               ) -> Dict[int, np.ndarray]:
+        """Rows for ``keys`` valid at ``version`` (default: current), as
+        ``{index -> row copy}``. A key whose slot carries any other stamp is
+        a miss — stale rows are never returned."""
+        out: Dict[int, np.ndarray] = {}
+        with self._lock:
+            v = self._version if version is None else version
+            for i, k in enumerate(keys):
+                s = self._slot_of.get(k)
+                if s is not None and self._stamp[s] == v:
+                    self._ref[s] = True
+                    self.hits += 1
+                    out[i] = self._buf[s].copy()
+                else:
+                    self.misses += 1
+        return out
+
+    def probe(self, keys: Sequence[Tuple], version: Optional[int] = None
+              ) -> int:
+        """Count how many of ``keys`` are resident at ``version`` WITHOUT
+        copying rows or touching the hit/miss counters — the pipeline
+        scheduler thread's staging probe (training can never consume
+        materialized rows in the grad path, so it only observes)."""
+        n = 0
+        with self._lock:
+            v = self._version if version is None else version
+            for k in keys:
+                s = self._slot_of.get(k)
+                if s is not None and self._stamp[s] == v:
+                    n += 1
+            self.probe_hits += n
+            self.probe_misses += len(keys) - n
+        return n
+
+    def insert(self, keys: Sequence[Tuple], rows: np.ndarray,
+               version: Optional[int] = None) -> int:
+        """Store ``rows[i]`` under ``keys[i]``, stamped ``version`` (default:
+        current). If the caller pinned a version and the cache has since been
+        bumped, the whole insert is dropped (``stale_drops``): rows computed
+        under superseded params/KG state must never become servable. Returns
+        the number of rows stored."""
+        rows = np.asarray(rows)
+        if len(keys) != len(rows):
+            raise ValueError(f"{len(keys)} keys for {len(rows)} rows")
+        with self._lock:
+            v = self._version if version is None else version
+            if v != self._version:
+                self.stale_drops += len(keys)
+                return 0
+            if self._buf is None:
+                self._buf = np.empty((self.budget_rows, rows.shape[1]),
+                                     dtype=rows.dtype)
+            elif rows.shape[1] != self._buf.shape[1]:
+                raise ValueError(
+                    f"row dim {rows.shape[1]} != cache dim {self._buf.shape[1]}"
+                    " — one cache serves one model")
+            for k, row in zip(keys, rows):
+                s = self._slot_of.get(k)
+                if s is None:
+                    s = self._take_slot()
+                    old = self._owner[s]
+                    if old is not None:
+                        del self._slot_of[old]
+                        self.evictions += 1
+                    self._owner[s] = k
+                    self._slot_of[k] = s
+                self._buf[s] = row
+                self._stamp[s] = v
+                self._ref[s] = True
+                self.inserts += 1
+            return len(keys)
+
+    def _take_slot(self) -> int:
+        """CLOCK sweep (lock held): free and STALE slots are reclaimed
+        immediately — a row stamped with a superseded version is dead weight
+        regardless of its reference bit; live rows get one second chance."""
+        for _ in range(2 * self.budget_rows):
+            s = self._hand
+            self._hand = (self._hand + 1) % self.budget_rows
+            if self._owner[s] is None or self._stamp[s] != self._version:
+                return s
+            if self._ref[s]:
+                self._ref[s] = False
+                continue
+            return s
+        return self._hand  # unreachable: a full sweep clears every ref bit
+
+    # -------------------------------------------------------------- metrics
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def stats(self) -> Dict:
+        with self._lock:
+            live = int(np.count_nonzero(
+                (self._stamp == self._version)
+                & np.asarray([o is not None for o in self._owner])))
+            return {
+                "name": self.name,
+                "capacity": self.budget_rows,
+                "resident": len(self._slot_of),
+                "live": live,                  # resident AND current-version
+                "version": self._version,
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hit_rate,
+                "probe_hits": self.probe_hits,
+                "probe_misses": self.probe_misses,
+                "inserts": self.inserts,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "stale_drops": self.stale_drops,
+                "invalidation_reasons": dict(self._inval_reasons),
+            }
+
+    def reset_counters(self) -> None:
+        """Zero the counters (contents, version and stamps kept) — e.g.
+        after serving warmup so the steady-state hit rate is measured over
+        the timed phase only."""
+        with self._lock:
+            self.hits = self.misses = 0
+            self.probe_hits = self.probe_misses = 0
+            self.inserts = self.evictions = 0
+            self.invalidations = self.stale_drops = 0
+            self._inval_reasons = {}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._slot_of.clear()
+            self._owner = [None] * self.budget_rows
+            self._stamp.fill(-1)
+            self._ref.fill(False)
+            self._hand = 0
+
+    # ---------------------------------------------------------------- debug
+    def check_consistent(self) -> None:
+        """Invariant check for the concurrency tests: the key->slot map and
+        the slot->owner array must be exact inverses, and every mapped slot
+        must be in range."""
+        with self._lock:
+            for k, s in self._slot_of.items():
+                assert 0 <= s < self.budget_rows, (k, s)
+                assert self._owner[s] == k, (k, s, self._owner[s])
+            owners = [o for o in self._owner if o is not None]
+            assert len(owners) == len(self._slot_of)
+            assert set(owners) == set(self._slot_of)

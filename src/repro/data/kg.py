@@ -47,32 +47,75 @@ TABLE4: Dict[str, KGStats] = {
 
 
 class KnowledgeGraph:
-    """Immutable triple store with CSR adjacency for fast traversal.
+    """Append-only triple store with CSR adjacency for fast traversal.
 
     Adjacency is keyed by (head, relation) via a sorted (h * R + r) index so
     ``neighbors(h, r)`` is two binary searches — the access pattern the online
     sampler (App. F) hammers.
+
+    The store is immutable between writes; the one mutation is
+    ``add_triples`` (online KG growth), which rebuilds the CSR index, drops
+    every ``cached_property`` adjacency view and notifies invalidation
+    listeners — the hook materialized caches (``core/matcache.py``) use to
+    bump their version stamp so rows encoded against the old graph are
+    never served.
     """
 
+    # cached_property views derived from ``triples`` — every name here must
+    # be dropped from ``__dict__`` on a write or stale adjacency survives.
+    _CACHED_VIEWS = ("out_degree", "degree", "edges_with_outgoing",
+                     "relations_by_head", "incoming_by_tail",
+                     "entities_with_incoming")
+
     def __init__(self, n_entities: int, n_relations: int, triples: np.ndarray, name: str = "kg"):
-        assert triples.ndim == 2 and triples.shape[1] == 3
         self.name = name
         self.n_entities = int(n_entities)
         self.n_relations = int(n_relations)
+        self.version = 0
+        self._listeners: list = []
+        self._build(triples)
+
+    def _build(self, triples: np.ndarray) -> None:
+        assert triples.ndim == 2 and triples.shape[1] == 3
         # Deduplicate and sort by (h, r, t).
         key = (
-            triples[:, 0].astype(np.int64) * n_relations + triples[:, 1].astype(np.int64)
-        ) * n_entities + triples[:, 2].astype(np.int64)
+            triples[:, 0].astype(np.int64) * self.n_relations + triples[:, 1].astype(np.int64)
+        ) * self.n_entities + triples[:, 2].astype(np.int64)
         order = np.argsort(key, kind="stable")
         key = key[order]
         keep = np.concatenate([[True], key[1:] != key[:-1]])
         self.triples = triples[order][keep].astype(np.int64)
         # CSR over (h, r).
-        self._hr = self.triples[:, 0] * n_relations + self.triples[:, 1]
+        self._hr = self.triples[:, 0] * self.n_relations + self.triples[:, 1]
         self._tails = np.ascontiguousarray(self.triples[:, 2])
 
     def __len__(self) -> int:
         return self.triples.shape[0]
+
+    # ------------------------------------------------------------ KG writes
+    def add_invalidation_listener(self, fn) -> None:
+        """Register ``fn(reason: str)`` to be called after every write —
+        e.g. ``MaterializedSubqueryCache.bump_version`` via ``watch_kg``."""
+        self._listeners.append(fn)
+
+    def add_triples(self, new_triples) -> "KnowledgeGraph":
+        """Online KG write: merge new (h, r, t) rows (duplicates of existing
+        triples are absorbed), rebuild the CSR index, invalidate every
+        cached adjacency view and notify listeners. Bumps ``version``."""
+        new = np.asarray(new_triples, dtype=np.int64).reshape(-1, 3)
+        if len(new):
+            ents = new[:, [0, 2]]
+            if ents.min() < 0 or ents.max() >= self.n_entities:
+                raise ValueError("entity id out of range")
+            if new[:, 1].min() < 0 or new[:, 1].max() >= self.n_relations:
+                raise ValueError("relation id out of range")
+        self._build(np.concatenate([self.triples, new], axis=0))
+        for name in self._CACHED_VIEWS:
+            self.__dict__.pop(name, None)
+        self.version += 1
+        for fn in list(self._listeners):
+            fn("kg_write")
+        return self
 
     def neighbors(self, h: int, r: int) -> np.ndarray:
         """All tails t with (h, r, t) in the graph."""

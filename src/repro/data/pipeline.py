@@ -129,7 +129,7 @@ def batch_entity_ids(queries, pos: np.ndarray, neg: np.ndarray) -> np.ndarray:
 
 def prepare_work_item(sampler, executor, batch, n_negatives: int,
                       dev_static=None, sem_cache=None,
-                      ctx=None) -> "PreparedWorkItem":
+                      ctx=None, mat_cache=None) -> "PreparedWorkItem":
     """Run the full host side of one training step: negative-sampling arrays,
     plan compilation (canonicalize → CSE → Algorithm-1 lowering, i.e.
     ``executor.prepare`` returning a ``CompiledPlan``), and device transfer
@@ -158,7 +158,18 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
     the fused step was compiled against (``ctx.put_batch``), so the transfer
     happens once, on this thread, and dispatch does zero resharding. When
     omitted (or single-device) the puts are plain ``jnp.asarray`` —
-    bit-for-bit the historical path."""
+    bit-for-bit the historical path.
+
+    ``mat_cache`` (a ``core.matcache.MaterializedSubqueryCache``) is probed
+    HERE, on the scheduler thread, like the semantic prefetch: the work item
+    records how many of the batch's queries already have materialized rows
+    at the current version (``mat_hits``/``mat_version``). Training itself
+    never CONSUMES those rows — a cached constant inside the fused train
+    step would detach its subtree's gradient — but the probe exercises the
+    cross-thread lock discipline and surfaces reuse-potential counters,
+    and inference consumers sharing the cache (eval after training, a
+    co-located serving engine) get the rows the trainer's version bumps
+    keep honest."""
     import jax.numpy as jnp  # deferred: keep module import light
 
     put = jnp.asarray
@@ -170,6 +181,11 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
     if sem_cache is not None:
         sem_stage = sem_cache.plan(batch_entity_ids(queries, pos, neg),
                                    background=True)
+    mat_hits, mat_version = 0, -1
+    if mat_cache is not None:
+        mat_version = mat_cache.version
+        mat_hits = mat_cache.probe([q.key() for q in queries],
+                                   version=mat_version)
     prepared = executor.prepare(queries)
     static = (dev_static.get(prepared.structure_key)
               if dev_static is not None else None)
@@ -195,6 +211,8 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
         patterns=prepared.patterns,
         n_queries=len(queries),
         sem_stage=sem_stage,
+        mat_hits=mat_hits,
+        mat_version=mat_version,
     )
 
 
@@ -218,6 +236,8 @@ class PreparedWorkItem:
     sem_stage: object = None    # semantic.store.SemStage: rows prefetched on
     #                             the scheduler thread; main thread applies
     #                             it (one donated scatter) before dispatch
+    mat_hits: int = 0           # queries with a materialized row resident at
+    mat_version: int = -1       # this cache version when the item was staged
 
 
 class PreparedBatchPrefetcher:
@@ -249,12 +269,14 @@ class PreparedBatchPrefetcher:
         batch_fn: Optional[Callable[[], List[SampledQuery]]] = None,
         sem_cache=None,
         ctx=None,
+        mat_cache=None,
     ):
         self.sampler = sampler
         self.executor = executor
         self.n_negatives = n_negatives
         self.sem_cache = sem_cache
         self.ctx = ctx
+        self.mat_cache = mat_cache
         self._q: "queue.Queue[PreparedWorkItem]" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
@@ -281,7 +303,8 @@ class PreparedBatchPrefetcher:
                 item = prepare_work_item(self.sampler, self.executor, batch,
                                          self.n_negatives, self._dev_static,
                                          sem_cache=self.sem_cache,
-                                         ctx=self.ctx)
+                                         ctx=self.ctx,
+                                         mat_cache=self.mat_cache)
             except BaseException as e:  # surface on the consumer side
                 if self._error is None:
                     self._error = e

@@ -101,6 +101,13 @@ def main() -> None:
                          "request before a partial batch dispatches")
     ap.add_argument("--queue-depth", type=int, default=256,
                     help="bounded admission queue (backpressure limit)")
+    ap.add_argument("--materialize", type=int, default=0, metavar="N",
+                    help="materialized-subquery cache: keep up to N encoded "
+                         "rows keyed by query, consulted by the batcher "
+                         "before padding so duplicate-heavy traffic skips "
+                         "re-encoding entirely (version-stamped — "
+                         "invalidated on param updates and KG writes; "
+                         "0 = off)")
     ap.add_argument("--no-cse", action="store_true",
                     help="ablation: disable cross-query subexpression "
                          "sharing in the plan compiler (duplicate subqueries "
@@ -151,13 +158,21 @@ def main() -> None:
                 cache.reset()  # restored cache buffers: nothing resident yet
 
     executor = PooledExecutor(model, b_max=256, ctx=ctx, cse=not args.no_cse)
+    mat_cache = None
+    if args.materialize > 0:
+        from repro.core import MaterializedSubqueryCache
+
+        mat_cache = MaterializedSubqueryCache(args.materialize)
+        mat_cache.watch_kg(kg)
+        print(f"materialized cache: {args.materialize} rows "
+              f"(invalidated on param update / KG write)")
     cfg = ServingConfig(max_batch=args.max_batch,
                         max_wait_ms=args.max_wait_ms,
                         queue_depth=args.queue_depth, top_k=args.top_k)
     engine = ServingEngine(model, params, executor=executor, cfg=cfg,
                            sem_cache=cache,
                            sem_rows_fn=store.read_rows if store else None,
-                           ctx=ctx)
+                           ctx=ctx, mat_cache=mat_cache)
     workload = make_workload(kg, args.requests, seed=7)
 
     # Warmup pass compiles every signature the replay will form; the timed
@@ -184,6 +199,16 @@ def main() -> None:
           f"{sh['pooled_rows_saved']} pooled rows saved "
           f"({sh['saved_frac']:.1%}), "
           f"{st['coalesced']} duplicate requests coalesced")
+    pc = st.get("plan_cache")
+    if pc is not None:
+        print(f"plan cache: {pc['size']} canonical plans, "
+              f"hit rate {pc['hit_rate']:.2%} "
+              f"({pc['canonicalize_calls']} canonicalizations)")
+    mc = st.get("mat_cache")
+    if mc is not None:
+        print(f"materialized rows: hit rate {mc['hit_rate']:.2%} "
+              f"({mc['hits']} hits / {mc['misses']} misses), "
+              f"{mc['live']} live, {mc['evictions']} evictions")
     print(f"first: {json.dumps(report.results[0])[:140]}...")
     if cache is not None:
         cs = cache.stats()

@@ -88,6 +88,11 @@ def main() -> None:
                          "subexpression sharing (DESIGN.md §Compiler) — "
                          "every query node becomes its own pooled row, the "
                          "pre-compiler behavior")
+    ap.add_argument("--materialized-rows", type=int, default=0,
+                    help="attach a MaterializedSubqueryCache of N encoded "
+                         "rows to the pooled executor's eval/encode path "
+                         "(version-stamped: invalidated on every param "
+                         "update and KG write; 0 = off)")
     ap.add_argument("--pipeline", action="store_true",
                     help="pipelined dataflow mode: overlap Algorithm-1 "
                          "scheduling for batch k+1 with device execution of "
@@ -158,7 +163,7 @@ def main() -> None:
         adam=AdamConfig(lr=args.lr), adaptive=args.adaptive,
         executor=args.executor, checkpoint_dir=args.ckpt_dir,
         pipeline=args.pipeline, max_inflight=args.max_inflight,
-        cse=not args.no_cse,
+        cse=not args.no_cse, materialized_rows=args.materialized_rows,
     )
     trainer = NGDBTrainer(model, kg, cfg, semantic_table=table,
                           semantic_cache=cache, ctx=ctx)
@@ -186,6 +191,17 @@ def main() -> None:
           f"{' (query-level baseline)' if args.executor != 'pooled' else ''}"
           f" — {sh['pooled_rows_saved']} pooled rows saved "
           f"({sh['saved_frac']:.1%} of {sh['nodes_before']})")
+    pc = sh.get("plan_cache")
+    if pc is not None:
+        print(f"plan cache: {pc['size']} canonical plans, "
+              f"hit rate {pc['hit_rate']:.2%} "
+              f"({pc['canonicalize_calls']} canonicalizations, "
+              f"{pc['misses']} rebuilds)")
+    mc = sh.get("materialized")
+    if mc is not None:
+        print(f"materialized rows: hit rate {mc['hit_rate']:.2%}, "
+              f"{mc['live']} live rows, {mc['invalidations']} invalidations "
+              f"({mc['stale_drops']} stale inserts dropped)")
     if ctx.is_sharded:
         ent = trainer.params["entity"]
         per_dev = ent.addressable_shards[0].data.nbytes

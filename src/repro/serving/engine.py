@@ -24,7 +24,11 @@ Pieces:
   is padded (``coalesced`` counter in ``stats()``), and the executor's plan
   compiler (DESIGN.md §Compiler) CSE-merges identical *subtrees* of the
   distinct queries that remain — duplicate subqueries across concurrent
-  requests are computed once per micro-batch.
+  requests are computed once per micro-batch. With a ``mat_cache``
+  (``core/matcache.py``) the reuse goes CROSS-batch: the batcher consults
+  the materialized-row cache before padding, encodes only the misses, and
+  duplicate-heavy traffic serves repeat queries off cached rows (version-
+  stamped, invalidated on ``update_params`` and KG writes).
 * **Signature-bucketed padding** — micro-batches pad to the next power-of-
   two size by repeating the last query (padded rows are computed and
   discarded). Bounding the batch-size set bounds the jit signature set: the
@@ -190,7 +194,8 @@ class ServingEngine:
 
     def __init__(self, model, params, executor=None,
                  cfg: Optional[ServingConfig] = None, sem_cache=None,
-                 sem_rows_fn=None, ctx=None, started: bool = True):
+                 sem_rows_fn=None, ctx=None, started: bool = True,
+                 mat_cache=None):
         self.model = model
         self.params = params
         self.cfg = cfg or ServingConfig()
@@ -204,6 +209,16 @@ class ServingEngine:
                 " to stream H_sem for all-entity scoring")
         self.sem_cache = sem_cache
         self.sem_rows_fn = sem_rows_fn
+        # Materialized-subquery cache (core/matcache.py): the batcher
+        # consults it BEFORE padding, so a duplicate-of-an-earlier-batch
+        # request costs one host row copy instead of a device encode. The
+        # engine owns the consult/insert; leave the executor's own
+        # ``mat_cache`` unset here or every miss would be double-counted.
+        self.mat_cache = mat_cache
+        if (mat_cache is not None
+                and getattr(self.executor, "mat_cache", None) is not None):
+            raise ValueError(
+                "pass mat_cache to the engine OR the executor, not both")
         self._scorer = scorer_for(model, ctx)
         self._scorer_traces0 = self._scorer.traces
         self._sharing0 = dict(self.executor.sharing_stats())
@@ -377,6 +392,52 @@ class ServingEngine:
                 self._completed += 1
             r.future.set_result(res)
 
+    def update_params(self, params) -> None:
+        """Hot-swap the serving params (e.g. after an online training step).
+        The swap and the materialized-cache invalidation happen under ONE
+        lock acquisition, so no batch observes new params with old rows: a
+        batch that snapshotted before the swap keeps serving (old params,
+        old-version rows) consistently, and its late inserts are dropped by
+        the version check."""
+        with self._lock:
+            self.params = params
+            if self.mat_cache is not None:
+                self.mat_cache.bump_version("param_update")
+
+    def _states_for(self, params, uniq: List[QueryInstance],
+                    padded: List[QueryInstance], n_real: int, mat_ver: int):
+        """Encoded states for the padded unique composition, serving rows
+        out of the materialized cache where possible. The assembled array is
+        bitwise what ``executor.encode(params, padded)`` would return —
+        pooled ops are row-wise, so subset encodes reproduce full-batch rows
+        exactly, cached rows were such subset rows at the same version, and
+        pad rows repeat the last unique row just as ``pad_to_bucket``'s
+        repeated query would — so scoring and offline-oracle replay are
+        untouched by the cache."""
+        if self.mat_cache is None:
+            return self.executor.encode(params, padded, compiled=True)
+        keys = [q.key() for q in uniq]
+        cached = self.mat_cache.lookup(keys, version=mat_ver)
+        miss = [j for j in range(len(uniq)) if j not in cached]
+        fresh = None
+        if miss:
+            sub, sub_n = [uniq[j] for j in miss], len(miss)
+            if self.cfg.bucket:
+                sub, sub_n = pad_to_bucket(sub)
+            fresh = np.asarray(
+                self.executor.encode(params, sub, compiled=True))[: len(miss)]
+            self.mat_cache.insert([keys[j] for j in miss], fresh,
+                                  version=mat_ver)
+        dim = (fresh.shape[1] if fresh is not None
+               else next(iter(cached.values())).shape[0])
+        states = np.empty((len(padded), dim), dtype=np.float32)
+        for j, row in cached.items():
+            states[j] = row
+        for i, j in enumerate(miss):
+            states[j] = fresh[i]
+        states[n_real:] = states[n_real - 1]
+        return states
+
     def _serve(self, batch: List[_Request], flush: str) -> List[Dict]:
         # Exact-duplicate coalescing: in-flight requests whose query keys
         # match share ONE computed row — encode + all-entity scoring run once
@@ -399,18 +460,28 @@ class ServingEngine:
             padded, n_real = pad_to_bucket(uniq)
         else:
             padded, n_real = list(uniq), len(uniq)
-        params = self.params
+        # Snapshot (params, cache version) together under the lock:
+        # ``update_params`` swaps and bumps under the same lock, so a batch
+        # can never pair new params with rows materialized under old ones
+        # (or vice versa) — the staleness contract tests/test_plan_cache.py
+        # pins.
+        with self._lock:
+            params = self.params
+            mat_ver = (self.mat_cache.version
+                       if self.mat_cache is not None else -1)
         if self.sem_cache is not None:
             # Staging folds into the batcher thread: the plan's store read +
             # device put and the apply scatter happen here, once per
             # micro-batch, before the encode that gathers the rows. Single
-            # batcher thread ⇒ plan order == apply order for free.
+            # batcher thread ⇒ plan order == apply order for free. No
+            # mat-cache bump: staging changes WHERE rows live, not their
+            # values, so materialized rows stay valid.
             anchors = np.concatenate([q.anchors for q in padded])
             stage = self.sem_cache.plan(anchors)
             if stage is not None:
                 params = self.sem_cache.apply_to(params, stage)
                 self.params = params
-        states = self.executor.encode(params, padded, compiled=True)
+        states = self._states_for(params, uniq, padded, n_real, mat_ver)
         if self.sem_cache is not None:
             scores = self.model.score_all_chunked(params, states,
                                                   self.sem_rows_fn)
@@ -484,6 +555,8 @@ class ServingEngine:
         """Zero retrace/latency/flush counters (after warmup) — compiled
         programs and cache contents are kept."""
         self.executor.reset_cache_counters()
+        if self.mat_cache is not None:
+            self.mat_cache.reset_counters()
         self._scorer_traces0 = self._scorer.traces
         self._sharing0 = dict(self.executor.sharing_stats())
         with self._lock:
@@ -531,6 +604,11 @@ class ServingEngine:
             "saved_frac": (before - after) / max(before, 1),
         }
         out["scorer_traces"] = self._scorer.traces - self._scorer_traces0
+        out["plan_cache"] = sh["plan_cache"]
         if self.sem_cache is not None:
             out["sem_cache"] = self.sem_cache.stats()
+        if self.mat_cache is not None:
+            # Duplicate-heavy traffic shows up here as the hit rate: rows
+            # served without re-encoding since the last reset_counters.
+            out["mat_cache"] = self.mat_cache.stats()
         return out

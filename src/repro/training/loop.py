@@ -60,6 +60,10 @@ class TrainConfig:
     gil_switch_interval: float = 2e-3  # pipelined: bound GIL handoff latency
     cse: bool = True                # cross-query subexpression sharing
     #                                 (False = --no-cse ablation baseline)
+    materialized_rows: int = 0      # >0: attach a MaterializedSubqueryCache
+    #                                 of that many rows to the pooled
+    #                                 executor's eval/encode path (training
+    #                                 gradients never consume cached rows)
 
 
 class NGDBTrainer:
@@ -75,10 +79,21 @@ class NGDBTrainer:
         # fused step compiles with explicit in/out shardings. The default
         # single-device context makes every placement hook a no-op.
         self.ctx = ctx or ExecutionContext.single_device()
+        # Materialized subquery rows are an inference-side cache: the fused
+        # train step never reads them (a constant row would detach the
+        # gradient), but executor.encode() on the eval path does, and they
+        # must be invalidated on every param update / KG write (bumps below).
+        self.mat_cache = None
+        if cfg.materialized_rows > 0 and cfg.executor == "pooled":
+            from repro.core.matcache import MaterializedSubqueryCache
+
+            self.mat_cache = MaterializedSubqueryCache(cfg.materialized_rows)
+            self.mat_cache.watch_kg(kg)
         if cfg.executor == "pooled":
             self.executor = PooledExecutor(model, b_max=cfg.b_max,
                                            cache_size=cfg.compile_cache_size,
-                                           ctx=self.ctx, cse=cfg.cse)
+                                           ctx=self.ctx, cse=cfg.cse,
+                                           mat_cache=self.mat_cache)
         else:
             self.executor = QueryLevelExecutor(model, b_max=cfg.b_max,
                                                ctx=self.ctx)
@@ -210,6 +225,11 @@ class NGDBTrainer:
             patterns = prepared.patterns
         else:  # query-level baseline: one fragmented pass per pattern group
             loss, per_q, patterns = self._query_level_step(queries, pos, neg)
+        if self.mat_cache is not None:
+            # params handle just advanced — rows encoded under the old
+            # params must never be served (or inserted: version pinning in
+            # insert() drops in-flight encodes started before this bump).
+            self.mat_cache.bump_version("param_update")
         loss = float(loss)
         if self.adaptive:
             self.adaptive.update(pattern_losses_from_batch(patterns, per_q))
@@ -396,6 +416,7 @@ class NGDBTrainer:
             self.sampler, self.executor, self.cfg.batch_size,
             self.cfg.n_negatives, depth=max(self.cfg.prefetch, 1),
             batch_fn=batch_fn, sem_cache=self.sem_cache, ctx=self.ctx,
+            mat_cache=self.mat_cache,
         )
         # The main thread re-acquires the GIL every time a jit call returns
         # from (GIL-free) XLA execution; the default 5 ms switch interval
@@ -427,6 +448,11 @@ class NGDBTrainer:
                     self.params, self.opt_state, item.steps, item.ans,
                     item.pos, item.neg,
                 )
+                if self.mat_cache is not None:
+                    # Dispatch replaced the params handle; scheduler-thread
+                    # probes pinned to the old version stop matching and any
+                    # in-flight insert pinned to it is dropped.
+                    self.mat_cache.bump_version("param_update")
                 # Snapshot on checkpoint boundaries BEFORE the next dispatch
                 # donates these buffers (jnp.copy enqueues ahead of donation).
                 step_no = self.step + len(inflight) + 1

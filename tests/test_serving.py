@@ -303,6 +303,71 @@ def test_engine_coalesced_duplicates_honor_per_request_top_k(tiny_kg,
     assert r3["scores"] == r9["scores"][:3]
 
 
+def test_engine_concurrent_submitters_share_caches(tiny_kg, mixed_queries):
+    """N submitter threads + the batcher + outside prepare() callers share
+    the plan and materialized caches concurrently: every good future
+    resolves, each poison request fails ALONE (KeyError, solo-retry
+    isolation), counters sum exactly, the cache invariants hold (no torn
+    slot maps) and the engine stays serviceable afterwards."""
+    import threading
+
+    from repro.core import MaterializedSubqueryCache
+
+    model, params, ex = _setup(tiny_kg)
+    mat = MaterializedSubqueryCache(32)
+    cfg = ServingConfig(max_batch=8, max_wait_ms=5.0)
+    pool = [b.query for b in mixed_queries][:6]
+    bad = QueryInstance("no-such-pattern", np.array([0]), np.array([0]))
+    n_threads, per_thread = 4, 25
+    n_poison_each = sum(1 for i in range(per_thread) if i % 12 == 7)
+    results, errors = [], []
+    res_lock = threading.Lock()
+    with ServingEngine(model, params, executor=ex, cfg=cfg,
+                       mat_cache=mat) as engine:
+
+        def submitter(tid):
+            rng = np.random.default_rng(tid)
+            futs = []
+            for i in range(per_thread):
+                q = bad if i % 12 == 7 else pool[int(rng.integers(len(pool)))]
+                futs.append((q is bad, engine.submit(q)))
+            for is_bad, f in futs:
+                try:
+                    r = f.result(timeout=120)
+                    with res_lock:
+                        results.append((is_bad, r))
+                except KeyError:
+                    with res_lock:
+                        errors.append(is_bad)
+
+        def preparer():
+            # hammer the shared plan cache from OUTSIDE the batcher thread
+            for _ in range(40):
+                ex.prepare(pool)
+
+        threads = ([threading.Thread(target=submitter, args=(t,))
+                    for t in range(n_threads)]
+                   + [threading.Thread(target=preparer) for _ in range(2)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # poison must not have wedged any lock: the engine still serves
+        assert engine.submit(pool[0]).result(timeout=60)["top_entities"]
+        st = engine.stats()
+
+    n_poison = n_threads * n_poison_each
+    assert errors == [True] * n_poison          # every poison future raised
+    assert len(results) == n_threads * per_thread - n_poison
+    assert not any(is_bad for is_bad, _ in results)
+    assert st["failures"] == n_poison
+    assert st["completed"] == st["submitted"]
+    mat.check_consistent()
+    mc = st["mat_cache"]
+    assert mc["hits"] + mc["misses"] > 0
+    assert mc["hits"] > 0                       # dup-heavy pool did reuse rows
+
+
 def test_engine_drain_on_close(tiny_kg, mixed_queries):
     """close(drain=True) serves everything already admitted — the tail
     partial batch flushes immediately, not after the age window."""
