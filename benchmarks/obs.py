@@ -1,0 +1,275 @@
+"""§Observability overhead gate: tracing must be free when off, cheap when on.
+
+The telemetry layer (DESIGN.md §Observability) lives permanently in the hot
+paths — pipeline scheduler, serving batcher, dispatch loop — so its cost
+contract is part of the perf surface and gets the same treatment as the
+compiler and serving invariants:
+
+* **disabled fast path** — a disabled ``TRACER.span()`` is one attribute
+  read + one shared-null-context return; the micro-benchmark asserts it
+  stays under 2 µs/call (it measures ~100 ns in practice), i.e. no
+  measurable steady-state cost at realistic span rates (~10 spans/step);
+* **bit-identity** — enabling tracing must not perturb numerics: two fresh
+  trainers on the SAME replayed workload, tracing off vs on, produce
+  EXACTLY equal loss sequences (float equality, pipelined mode);
+* **enabled overhead** — paired trials of the steady-state pipelined
+  replay through ONE warmed trainer, tracing toggled per pass: the gate is
+  the median of per-trial on/off time ratios (correlated machine noise
+  cancels within a pair), and it must stay ≤ ~2%. Measured without the
+  ``jax.profiler.TraceAnnotation`` bridge (``jax_annotations=False``) —
+  the bridge is for correlating lanes against a simultaneously captured
+  JAX device profile, where the profiler's own overhead dwarfs it;
+* **trace completeness** — a short sampler-driven pipelined run and a
+  serving replay each yield a validating trace (``validate_trace``: the
+  rules Perfetto's JSON importer enforces) with ≥ 4 named thread lanes and
+  the full span vocabulary for their side of the system.
+
+The summary lands in ``BENCH_obs.json`` at the repo root (committed); any
+violated invariant publishes ``ok: false`` BEFORE raising, so a stale green
+verdict can never survive a crashed run.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/obs.py`
+    _root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+
+from benchmarks.common import emit
+from repro.data import load_dataset
+from repro.models import ModelConfig, make_model
+from repro.obs import TRACER, validate_trace
+from repro.sampling import OnlineSampler
+from repro.training import AdamConfig, NGDBTrainer, TrainConfig
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_obs.json")
+
+#: Span names a pipelined train trace / serving trace must contain.
+TRAIN_SPANS = {"sample", "schedule", "transfer", "pipeline_wait", "compile",
+               "dispatch", "retire"}
+SERVE_SPANS = {"request", "batch", "encode", "score", "select"}
+
+
+def run(steps: int = 10, batch: int = 128, dim: int = 64,
+        dataset: str = "FB15k", trials: int = 8,
+        out_path: str = _DEFAULT_OUT) -> dict:
+    summary = {"ok": False, "suite": "obs", "dataset": dataset,
+               "failures": []}
+
+    def publish():
+        with open(out_path, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+        print(f"# wrote {out_path}")
+
+    try:
+        _run_inner(summary, steps, batch, dim, dataset, trials)
+        summary["ok"] = not summary["failures"]
+    except BaseException as e:
+        summary["failures"].append(f"{type(e).__name__}: {e}")
+        publish()
+        raise
+    finally:
+        TRACER.disable()
+    publish()
+    return summary
+
+
+def _make_trainer(kg, dim, batch, seed=0):
+    cfg = TrainConfig(batch_size=batch, n_negatives=8, b_max=128,
+                      adam=AdamConfig(lr=1e-3), seed=seed, prefetch=2,
+                      pipeline=True)
+    return NGDBTrainer(make_model("gqe", ModelConfig(dim=dim, gamma=6.0)),
+                       kg, cfg)
+
+
+def _run_inner(summary, steps, batch, dim, dataset, trials):
+    kg, _, _ = load_dataset(dataset)
+    summary.update({"batch_size": batch, "steps": steps, "trials": trials})
+
+    # -- disabled fast path: span() when tracing is off ------------------
+    TRACER.disable()
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with TRACER.span("probe"):
+            pass
+    ns = (time.perf_counter() - t0) / n * 1e9
+    summary["disabled_span_ns"] = round(ns, 1)
+    emit("obs/disabled_span", ns / 1e3, f"{ns:.0f} ns/span (off)")
+    if ns > 2000:
+        summary["failures"].append(
+            f"disabled span() costs {ns:.0f} ns/call > 2 µs — the off "
+            f"path is no longer a single attribute read")
+
+    # -- bit-identity: tracing on must not perturb numerics --------------
+    batches = [OnlineSampler(kg, seed=29).sample_batch(batch)
+               for _ in range(4)]
+
+    def stream():
+        it = itertools.cycle(batches)
+        return lambda: next(it)
+
+    losses = {}
+    for on in (False, True):
+        if on:
+            TRACER.enable(jax_annotations=False)
+        else:
+            TRACER.disable()
+        tr = _make_trainer(kg, dim, batch)
+        tr.train(steps, log_every=0, batches=stream())
+        losses[on] = [h["loss"] for h in tr.history]
+    TRACER.disable()
+    summary["loss_bitwise"] = losses[False] == losses[True]
+    emit(f"obs/{dataset}/loss_bitwise", 0.0, str(summary["loss_bitwise"]))
+    if not summary["loss_bitwise"]:
+        summary["failures"].append(
+            f"tracing perturbs the loss sequence: off={losses[False]} "
+            f"on={losses[True]}")
+
+    # -- enabled overhead: steady-state pipelined replay, off vs on ------
+    # ONE warmed trainer, tracing toggled per timed pass: the two modes
+    # share every byte of host state (caches, allocator layout, threads),
+    # so the measured delta is the tracer's cost plus symmetric noise —
+    # separate per-mode trainer objects would bake object-level luck into
+    # the comparison.
+    replay = _make_trainer(kg, dim, batch)
+    replay.train(steps, log_every=0, batches=stream())  # warm signatures
+    best = {False: float("inf"), True: float("inf")}
+    deltas = []  # per-trial paired overhead: t_on / t_off - 1
+
+    def _round(n):
+        for t in range(max(n, 1)):
+            # Each trial times both modes back-to-back (rotated order), and
+            # the gate statistic is the MEDIAN of per-trial paired ratios:
+            # container-level throttling hits both halves of a pair
+            # near-identically and cancels in the ratio, rotation cancels
+            # the within-pair order bias, and the median discards the
+            # passes a noisy neighbour stomped on. Raw best-of minima are
+            # reported for context but carry ±4% run-to-run variance here.
+            order = (False, True) if t % 2 == 0 else (True, False)
+            pair = {}
+            for on in order:
+                if on:
+                    TRACER.enable(jax_annotations=False)
+                else:
+                    TRACER.disable()
+                t0 = time.perf_counter()
+                replay.train(steps, log_every=0, batches=stream())
+                pair[on] = time.perf_counter() - t0
+                best[on] = min(best[on], pair[on])
+            deltas.append(pair[True] / pair[False] - 1.0)
+
+    # A borderline verdict on a noisy box means too few samples, not a
+    # looser gate: escalate with more paired rounds before declaring the
+    # 2% contract broken.
+    rounds = 0
+    while True:
+        _round(trials)
+        rounds += 1
+        overhead = sorted(deltas)[len(deltas) // 2]
+        if overhead <= 0.02 or rounds >= 3:
+            break
+    TRACER.disable()
+    qps_off = steps * batch / best[False]
+    qps_on = steps * batch / best[True]
+    summary["overhead_rounds"] = rounds
+    summary["qps"] = {"tracing_off": round(qps_off, 1),
+                      "tracing_on": round(qps_on, 1)}
+    summary["tracing_overhead_frac"] = round(overhead, 4)
+    emit(f"obs/{dataset}/pipelined_overhead", 1e6 * best[True] / steps,
+         f"off={qps_off:.0f} on={qps_on:.0f} q/s "
+         f"(overhead {overhead:.1%})")
+    if overhead > 0.02:
+        summary["failures"].append(
+            f"tracing costs {overhead:.1%} pipelined throughput (median of "
+            f"{len(deltas)} paired on/off trials; best-of off={qps_off:.0f} "
+            f"on={qps_on:.0f} q/s) — contract: <= 2%")
+
+    # -- trace completeness: pipelined train (4 lanes + full vocabulary) --
+    # One trace covering both feed modes: the warmed replay trainer emits
+    # steady-state "dispatch" spans (every signature hot), and a fresh
+    # sampler-driven trainer emits "compile" spans plus the sampling-worker
+    # lanes (pinned-batch mode runs a single pump thread instead).
+    TRACER.enable(jax_annotations=False)
+    replay.train(steps, log_every=0, batches=stream())
+    tr = _make_trainer(kg, 16, batch, seed=31)
+    tr.train(3, log_every=0)  # no pinned batches: sampling workers run
+    train_trace = TRACER.to_json()
+    TRACER.disable()
+    _check_trace(summary, "train", train_trace, TRAIN_SPANS)
+
+    _serving_trace(summary, kg)
+
+
+def _check_trace(summary, tag, obj, want_spans):
+    try:
+        s = validate_trace(obj)
+    except ValueError as e:
+        summary["failures"].append(f"{tag} trace invalid: {e}")
+        return
+    lanes = set(s["lanes"])
+    names = set(s["names"])
+    summary[f"{tag}_trace"] = {"n_events": s["n_events"],
+                               "lanes": sorted(lanes),
+                               "span_names": sorted(names)}
+    emit(f"obs/{tag}_trace", 0.0,
+         f"{s['n_events']} events | {len(lanes)} lanes")
+    if len(lanes) < 4:
+        summary["failures"].append(
+            f"{tag} trace has {len(lanes)} named lanes {sorted(lanes)} < 4")
+    missing = want_spans - names
+    if missing:
+        summary["failures"].append(
+            f"{tag} trace is missing spans: {sorted(missing)} "
+            f"(got {sorted(names)})")
+
+
+def _serving_trace(summary, kg):
+    import jax
+
+    from repro.core import PooledExecutor
+    from repro.serving import (ServingConfig, ServingEngine, make_workload,
+                               run_closed_loop)
+
+    model = make_model("gqe", ModelConfig(dim=16, gamma=6.0))
+    params = model.init_params(jax.random.PRNGKey(0), kg.n_entities,
+                               kg.n_relations)
+    engine = ServingEngine(model, params,
+                           executor=PooledExecutor(model, b_max=128),
+                           cfg=ServingConfig(max_batch=16))
+    try:
+        workload = make_workload(kg, 64, seed=7)
+        run_closed_loop(engine, workload, concurrency=16)  # warm signatures
+        engine.reset_counters()
+        TRACER.enable()
+        TRACER.set_lane("loadgen main")
+        run_closed_loop(engine, workload, concurrency=16, threads=3)
+        serve_trace = TRACER.to_json()
+        TRACER.disable()
+        _check_trace(summary, "serving", serve_trace, SERVE_SPANS)
+    finally:
+        engine.close()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--trials", type=int, default=8)
+    ap.add_argument("--dataset", default="FB15k")
+    args = ap.parse_args()
+    run(steps=args.steps, batch=args.batch, dim=args.dim,
+        dataset=args.dataset, trials=args.trials)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,13 +13,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: tput,ops,sem,semstore,"
                          "adaptive,freebase,scaling,kernels,pipeline,serving,"
-                         "plan")
+                         "plan,obs")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (adaptive, kernels_bench, operator_speedup, plan,
-                            runtime_freebase, scaling, semantic, serving,
-                            throughput)
+    from benchmarks import (adaptive, kernels_bench, obs, operator_speedup,
+                            plan, runtime_freebase, scaling, semantic,
+                            serving, throughput)
 
     suites = [
         ("tput", "Table 3/1: operator-level vs query-level throughput",
@@ -48,6 +48,11 @@ def main() -> None:
         ("plan", "§Compiler: plan-IR CSE on an overlap-heavy replay "
                  "(>=25% pooled rows saved, bitwise losses, zero retraces)",
          plan.run),
+        # Persists its overhead/bit-identity/trace-completeness summary to
+        # BENCH_obs.json at the repo root (committed across PRs).
+        ("obs", "§Observability: tracing overhead gate (off = bit-identical "
+                "+ free; on <= 2% pipelined throughput; traces validate)",
+         obs.run),
     ]
     print("name,us_per_call,derived")
     for key, desc, fn in suites:

@@ -18,12 +18,18 @@ import collections
 import threading
 from typing import Any, Dict, Hashable, Optional
 
+from repro.obs.registry import get_registry
+
 
 class CompileCache:
     """An LRU mapping ``signature -> compiled program`` with counters.
 
     Thread-safe: the pipelined engine touches caches from the scheduler
     thread (schedule/encode caches) while the main thread reads stats.
+
+    Counters are registry metrics (``cache_hits{cache=<name>}`` etc., see
+    DESIGN.md §Observability); they stay int-comparable attributes so both
+    existing call sites and a process-wide snapshot see the same numbers.
     """
 
     def __init__(self, capacity: int = 128, name: str = "compile"):
@@ -31,9 +37,11 @@ class CompileCache:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.name = name
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        self._metrics = get_registry().group("cache", cache=name)
+        self.hits = self._metrics.counter("hits")
+        self.misses = self._metrics.counter("misses")
+        self.evictions = self._metrics.counter("evictions")
+        self.size_gauge = self._metrics.gauge("size")
         self._d: "collections.OrderedDict[Hashable, Any]" = collections.OrderedDict()
         self._lock = threading.Lock()
 
@@ -54,6 +62,7 @@ class CompileCache:
             while len(self._d) > self.capacity:
                 self._d.popitem(last=False)
                 self.evictions += 1
+            self.size_gauge.set(len(self._d))
         return value
 
     def __len__(self) -> int:
@@ -65,17 +74,17 @@ class CompileCache:
     # ------------------------------------------------------------- metrics
     @property
     def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
+        n = int(self.hits) + int(self.misses)
+        return int(self.hits) / n if n else 0.0
 
     def stats(self) -> Dict[str, float]:
         return {
             "name": self.name,
             "size": len(self._d),
             "capacity": self.capacity,
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
+            "hits": int(self.hits),
+            "misses": int(self.misses),
+            "evictions": int(self.evictions),
             "hit_rate": self.hit_rate,
         }
 
@@ -83,8 +92,10 @@ class CompileCache:
         """Zero the counters (not the contents) — e.g. after benchmark warmup
         so steady-state hit rate is measured over the timed phase only."""
         with self._lock:
-            self.hits = self.misses = self.evictions = 0
+            self._metrics.reset()
+            self.size_gauge.set(len(self._d))
 
     def clear(self) -> None:
         with self._lock:
             self._d.clear()
+            self.size_gauge.set(0)

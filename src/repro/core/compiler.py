@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.ops import OpType
 from repro.core.patterns import TEMPLATES, QueryInstance
+from repro.obs.registry import get_registry as _get_registry
 from repro.core.plan import CompiledPlan, PlanGraph, PlanNode, SharingReport
 from repro.core.querydag import BatchedDAG, build_batched_dag
 from repro.core.scheduler import ExecutionSchedule, schedule
@@ -206,10 +207,11 @@ class PlanCache:
         self._exact: "collections.OrderedDict" = collections.OrderedDict()
         self._canon: "collections.OrderedDict" = collections.OrderedDict()
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.canonicalize_calls = 0
+        self._metrics = _get_registry().group("plan_cache")
+        self.hits = self._metrics.counter("hits")
+        self.misses = self._metrics.counter("misses")
+        self.evictions = self._metrics.counter("evictions")
+        self.canonicalize_calls = self._metrics.counter("canonicalize_calls")
 
     def _put(self, d, key, value, cap) -> None:
         d[key] = value
@@ -257,8 +259,8 @@ class PlanCache:
 
     @property
     def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
+        n = int(self.hits) + int(self.misses)
+        return int(self.hits) / n if n else 0.0
 
     def stats(self) -> Dict[str, float]:
         with self._lock:
@@ -267,17 +269,16 @@ class PlanCache:
                 "size": len(self._canon),
                 "exact_size": len(self._exact),
                 "capacity": self.capacity,
-                "hits": self.hits,
-                "misses": self.misses,
-                "evictions": self.evictions,
+                "hits": int(self.hits),
+                "misses": int(self.misses),
+                "evictions": int(self.evictions),
                 "hit_rate": self.hit_rate,
-                "canonicalize_calls": self.canonicalize_calls,
+                "canonicalize_calls": int(self.canonicalize_calls),
             }
 
     def reset_counters(self) -> None:
         with self._lock:
-            self.hits = self.misses = self.evictions = 0
-            self.canonicalize_calls = 0
+            self._metrics.reset()
 
     def clear(self) -> None:
         with self._lock:

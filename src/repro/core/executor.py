@@ -28,6 +28,7 @@ from repro.core.compiler import PlanCache, compile_batch
 from repro.core.ops import OpType
 from repro.core.patterns import QueryInstance
 from repro.core.plan import CompiledPlan
+from repro.obs.registry import get_registry
 
 # Backwards-compatible name: the prepared-batch artifact is now the
 # compiler's output (same fields plus the sharing report).
@@ -68,9 +69,11 @@ class PooledExecutor:
         # paths only; the fused train step's encode closure never sees it —
         # a constant row inside grad would detach its subtree's gradient).
         self.mat_cache = mat_cache
-        # Cumulative sharing-report totals across every prepared batch.
-        self._nodes_before = 0
-        self._nodes_after = 0
+        # Cumulative sharing-report totals across every prepared batch
+        # (registry counters so process snapshots see CSE effect too).
+        self._exec_metrics = get_registry().group("executor")
+        self._nodes_before = self._exec_metrics.counter("nodes_before")
+        self._nodes_after = self._exec_metrics.counter("nodes_after")
         self._stats_lock = threading.Lock()
 
     def cache_stats(self) -> Dict[str, Dict[str, float]]:
@@ -84,7 +87,9 @@ class PooledExecutor:
 
     def reset_cache_counters(self) -> None:
         """Zero counters on every cache (contents kept) — e.g. after serving
-        warmup so steady-state retraces are measured over traffic only."""
+        warmup so steady-state retraces are measured over traffic only.
+        Scoped to THIS executor's caches; ``obs.get_registry().reset()`` is
+        the process-wide variant."""
         for c in (self._sched_cache, self._encode_cache,
                   self._encode_jit_cache, self._plan_cache):
             c.reset_counters()
@@ -113,7 +118,7 @@ class PooledExecutor:
         hits/misses/canonicalize_calls) and, when attached, ``materialized``
         (encoded-row hits/misses/invalidations)."""
         with self._stats_lock:
-            before, after = self._nodes_before, self._nodes_after
+            before, after = int(self._nodes_before), int(self._nodes_after)
         saved = before - after
         out = {
             "nodes_before": before,

@@ -42,6 +42,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.registry import get_registry
+
 
 class MaterializedSubqueryCache:
     """Bounded, version-stamped cache of encoded query rows.
@@ -65,14 +67,15 @@ class MaterializedSubqueryCache:
         self._stamp = np.full(budget_rows, -1, dtype=np.int64)
         self._ref = np.zeros(budget_rows, dtype=bool)
         self._hand = 0
-        self.hits = 0
-        self.misses = 0
-        self.probe_hits = 0
-        self.probe_misses = 0
-        self.inserts = 0
-        self.evictions = 0
-        self.invalidations = 0
-        self.stale_drops = 0
+        self._metrics = get_registry().group("mat_cache", cache=name)
+        self.hits = self._metrics.counter("hits")
+        self.misses = self._metrics.counter("misses")
+        self.probe_hits = self._metrics.counter("probe_hits")
+        self.probe_misses = self._metrics.counter("probe_misses")
+        self.inserts = self._metrics.counter("inserts")
+        self.evictions = self._metrics.counter("evictions")
+        self.invalidations = self._metrics.counter("invalidations")
+        self.stale_drops = self._metrics.counter("stale_drops")
         self._inval_reasons: Dict[str, int] = {}
 
     # -------------------------------------------------------------- version
@@ -187,8 +190,8 @@ class MaterializedSubqueryCache:
     # -------------------------------------------------------------- metrics
     @property
     def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
+        n = int(self.hits) + int(self.misses)
+        return int(self.hits) / n if n else 0.0
 
     def stats(self) -> Dict:
         with self._lock:
@@ -201,15 +204,15 @@ class MaterializedSubqueryCache:
                 "resident": len(self._slot_of),
                 "live": live,                  # resident AND current-version
                 "version": self._version,
-                "hits": self.hits,
-                "misses": self.misses,
+                "hits": int(self.hits),
+                "misses": int(self.misses),
                 "hit_rate": self.hit_rate,
-                "probe_hits": self.probe_hits,
-                "probe_misses": self.probe_misses,
-                "inserts": self.inserts,
-                "evictions": self.evictions,
-                "invalidations": self.invalidations,
-                "stale_drops": self.stale_drops,
+                "probe_hits": int(self.probe_hits),
+                "probe_misses": int(self.probe_misses),
+                "inserts": int(self.inserts),
+                "evictions": int(self.evictions),
+                "invalidations": int(self.invalidations),
+                "stale_drops": int(self.stale_drops),
                 "invalidation_reasons": dict(self._inval_reasons),
             }
 
@@ -218,10 +221,7 @@ class MaterializedSubqueryCache:
         after serving warmup so the steady-state hit rate is measured over
         the timed phase only."""
         with self._lock:
-            self.hits = self.misses = 0
-            self.probe_hits = self.probe_misses = 0
-            self.inserts = self.evictions = 0
-            self.invalidations = self.stale_drops = 0
+            self._metrics.reset()
             self._inval_reasons = {}
 
     def clear(self) -> None:

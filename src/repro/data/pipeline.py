@@ -31,6 +31,8 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro.obs.registry import get_registry
+from repro.obs.trace import TRACER
 from repro.sampling.online import OnlineSampler, SampledQuery
 
 
@@ -65,6 +67,7 @@ class BatchPrefetcher:
         # Each worker gets an independent RNG stream so batches differ.
         import numpy as np
 
+        TRACER.set_lane(f"sampling worker {worker_id}")
         local = OnlineSampler(
             self.sampler.kg,
             patterns=self.sampler.patterns,
@@ -74,7 +77,8 @@ class BatchPrefetcher:
         )
         while not self._stop.is_set():
             try:
-                batch = local.sample_batch(self.batch_size)
+                with TRACER.span("sample", n=self.batch_size):
+                    batch = local.sample_batch(self.batch_size)
             except RuntimeError:
                 continue  # rejection streak: drop and retry (straggler-safe)
             while not self._stop.is_set():
@@ -176,43 +180,61 @@ def prepare_work_item(sampler, executor, batch, n_negatives: int,
     if ctx is not None and ctx.is_sharded:
         put = ctx.put_batch
 
+    # Per-phase wall times are ALWAYS collected (a perf_counter pair each —
+    # nanoseconds against a multi-ms step) so step-time breakdowns work even
+    # with the tracer off; the spans only fire when tracing is on.
+    phases = {}
+    t0 = time.perf_counter()
     queries, pos, neg = sampler.to_training_arrays(batch, n_negatives)
+    phases["negatives_s"] = time.perf_counter() - t0
     sem_stage = None
     if sem_cache is not None:
-        sem_stage = sem_cache.plan(batch_entity_ids(queries, pos, neg),
-                                   background=True)
+        t0 = time.perf_counter()
+        with TRACER.span("sem_prefetch", n=len(queries)):
+            sem_stage = sem_cache.plan(batch_entity_ids(queries, pos, neg),
+                                       background=True)
+        phases["sem_prefetch_s"] = time.perf_counter() - t0
     mat_hits, mat_version = 0, -1
     if mat_cache is not None:
         mat_version = mat_cache.version
         mat_hits = mat_cache.probe([q.key() for q in queries],
                                    version=mat_version)
-    prepared = executor.prepare(queries)
-    static = (dev_static.get(prepared.structure_key)
-              if dev_static is not None else None)
-    if static is None:
-        static = (
-            [{k: put(v) for k, v in s.items()}
-             for s in prepared.slot_arrays],
-            put(prepared.answer_slots),
-        )
-        if dev_static is not None:
-            dev_static.put(prepared.structure_key, static)
-    slot_dev, ans = static
-    steps = [
-        {**s, **{k: put(v) for k, v in b.items()}}
-        for s, b in zip(slot_dev, prepared.bind_arrays)
-    ]
+    t0 = time.perf_counter()
+    with TRACER.span("schedule", n=len(queries)):
+        prepared = executor.prepare(queries)
+    phases["schedule_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    with TRACER.span("transfer", n_steps=len(prepared.bind_arrays)):
+        static = (dev_static.get(prepared.structure_key)
+                  if dev_static is not None else None)
+        if static is None:
+            static = (
+                [{k: put(v) for k, v in s.items()}
+                 for s in prepared.slot_arrays],
+                put(prepared.answer_slots),
+            )
+            if dev_static is not None:
+                dev_static.put(prepared.structure_key, static)
+        slot_dev, ans = static
+        steps = [
+            {**s, **{k: put(v) for k, v in b.items()}}
+            for s, b in zip(slot_dev, prepared.bind_arrays)
+        ]
+        pos_dev = put(pos[prepared.order])
+        neg_dev = put(neg[prepared.order])
+    phases["transfer_s"] = time.perf_counter() - t0
     return PreparedWorkItem(
         prepared=prepared,
         steps=steps,
         ans=ans,
-        pos=put(pos[prepared.order]),
-        neg=put(neg[prepared.order]),
+        pos=pos_dev,
+        neg=neg_dev,
         patterns=prepared.patterns,
         n_queries=len(queries),
         sem_stage=sem_stage,
         mat_hits=mat_hits,
         mat_version=mat_version,
+        phases=phases,
     )
 
 
@@ -238,6 +260,11 @@ class PreparedWorkItem:
     #                             it (one donated scatter) before dispatch
     mat_hits: int = 0           # queries with a materialized row resident at
     mat_version: int = -1       # this cache version when the item was staged
+    phases: dict = dataclasses.field(default_factory=dict)
+    #                             scheduler-thread phase wall times (seconds):
+    #                             negatives_s/sem_prefetch_s/schedule_s/
+    #                             transfer_s (+ sample_s added by the
+    #                             prefetcher) — feeds step-time breakdowns
 
 
 class PreparedBatchPrefetcher:
@@ -293,18 +320,37 @@ class PreparedBatchPrefetcher:
         from repro.core.compile_cache import CompileCache
 
         self._dev_static = CompileCache(128, name="dev_static")
+        # Scheduler-side telemetry: queue depth (how far ahead of the
+        # consumer this thread runs) + cumulative phase seconds.
+        self._metrics = get_registry().group("pipeline")
+        self._depth_gauge = self._metrics.gauge("prepared_q_depth")
+        self._phase_s = {
+            name: self._metrics.counter("phase_seconds", phase=name)
+            for name in ("sample", "negatives", "sem_prefetch", "schedule",
+                         "transfer")}
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def _run(self) -> None:
+        TRACER.set_lane("pipeline scheduler")
         while not self._stop.is_set():
             try:
-                batch = self._next_batch()
+                t0 = time.perf_counter()
+                # "sample" on this lane is raw-batch acquisition: the
+                # sampling itself when batch_fn runs inline, queue wait on
+                # the workers otherwise (their own lanes carry the real
+                # sampling spans).
+                with TRACER.span("sample"):
+                    batch = self._next_batch()
+                sample_s = time.perf_counter() - t0
                 item = prepare_work_item(self.sampler, self.executor, batch,
                                          self.n_negatives, self._dev_static,
                                          sem_cache=self.sem_cache,
                                          ctx=self.ctx,
                                          mat_cache=self.mat_cache)
+                item.phases["sample_s"] = sample_s
+                for name, c in self._phase_s.items():
+                    c.inc(item.phases.get(name + "_s", 0.0))
             except BaseException as e:  # surface on the consumer side
                 if self._error is None:
                     self._error = e
@@ -313,6 +359,10 @@ class PreparedBatchPrefetcher:
             while not self._stop.is_set():
                 try:
                     self._q.put(item, timeout=0.25)
+                    self._depth_gauge.set(self._q.qsize())
+                    if TRACER.enabled:
+                        TRACER.counter("prepared_q_depth",
+                                       depth=self._q.qsize())
                     break
                 except queue.Full:
                     continue

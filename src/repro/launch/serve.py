@@ -36,6 +36,7 @@ from repro.core import PooledExecutor
 from repro.data import load_dataset
 from repro.distributed.context import make_execution_context
 from repro.models import ModelConfig, make_model, model_names
+from repro.obs import MetricsSink, TRACER, get_registry
 from repro.serving import (ServingConfig, ServingEngine, make_workload,
                            run_closed_loop, run_open_loop, scorer_for,
                            topk_desc)
@@ -123,6 +124,21 @@ def main() -> None:
                          "§Sharding); emulate devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
     ap.add_argument("--profile", default="2d", choices=["2d", "fsdp"])
+    ap.add_argument("--latency-window", type=int, default=None,
+                    help="latency percentile window size (requests); "
+                         "default = engine's built-in window")
+    ap.add_argument("--client-threads", type=int, default=1,
+                    help="closed-loop client submitter threads (each is a "
+                         "named lane in the trace; ignored with --qps)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event/Perfetto JSON timeline "
+                         "of the timed replay (lanes: client N, serving "
+                         "batcher; spans: request/batch/sem_prefetch/encode/"
+                         "score/select). Load at ui.perfetto.dev")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write a final registry snapshot (engine counters, "
+                         "latency histogram, cache stats) as JSONL; "
+                         "summarize with python -m repro.obs.report")
     args = ap.parse_args()
 
     ctx = make_execution_context(args.mesh, profile=args.profile)
@@ -172,7 +188,8 @@ def main() -> None:
     engine = ServingEngine(model, params, executor=executor, cfg=cfg,
                            sem_cache=cache,
                            sem_rows_fn=store.read_rows if store else None,
-                           ctx=ctx, mat_cache=mat_cache)
+                           ctx=ctx, mat_cache=mat_cache,
+                           latency_window=args.latency_window)
     workload = make_workload(kg, args.requests, seed=7)
 
     # Warmup pass compiles every signature the replay will form; the timed
@@ -183,11 +200,21 @@ def main() -> None:
           f"({engine.retraces()} cold cache misses)")
     engine.reset_counters()
 
+    # Trace only the timed steady-state replay (the batcher lane registered
+    # itself at engine start; lane names survive enable()).
+    if args.trace:
+        TRACER.enable()
+        TRACER.set_lane("loadgen main")
     if args.qps > 0:
         report = run_open_loop(engine, workload, qps=args.qps)
     else:
         report = run_closed_loop(engine, workload,
-                                 concurrency=args.concurrency)
+                                 concurrency=args.concurrency,
+                                 threads=args.client_threads)
+    if args.trace:
+        TRACER.write(args.trace)
+        TRACER.disable()
+        print(f"trace: wrote {args.trace} (load at ui.perfetto.dev)")
     st = engine.stats()
     print(report.describe())
     print(f"engine: {st['batches']} micro-batches "
@@ -214,6 +241,11 @@ def main() -> None:
         cs = cache.stats()
         print(f"semantic cache: hit rate {cs['hit_rate']:.2%}, "
               f"{cs['rows_staged']} rows staged from store")
+    if args.metrics:
+        with MetricsSink(args.metrics) as sink:
+            sink.write({"kind": "snapshot",
+                        "metrics": get_registry().snapshot()})
+        print(f"metrics: wrote {args.metrics}")
     engine.close()
 
 

@@ -26,6 +26,7 @@ import numpy as np
 from repro.data import load_dataset
 from repro.distributed.context import make_execution_context
 from repro.models import ModelConfig, make_model, model_names
+from repro.obs import TRACER, get_registry
 from repro.sampling import OnlineSampler
 from repro.semantic import (PTEConfig, SemanticCache, SemanticStore,
                             SemanticStoreError, StubPTE,
@@ -118,9 +119,22 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-queries", type=int, default=64)
     ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event/Perfetto JSON timeline "
+                         "of the run (thread lanes: main dispatch, pipeline "
+                         "scheduler, sampling workers; spans: sample/schedule"
+                         "/compile/transfer/sem_prefetch/store_io/dispatch/"
+                         "retire). Load at ui.perfetto.dev")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write per-step phase durations + bubble fraction "
+                         "as JSONL, with a final registry snapshot record; "
+                         "summarize with python -m repro.obs.report")
     args = ap.parse_args()
     if args.semantic_store:
         args.semantic = True
+    if args.trace:
+        TRACER.enable()
+        TRACER.set_lane("main dispatch")
 
     ctx = make_execution_context(args.mesh, profile=args.profile)
     if ctx.is_sharded:
@@ -164,6 +178,7 @@ def main() -> None:
         executor=args.executor, checkpoint_dir=args.ckpt_dir,
         pipeline=args.pipeline, max_inflight=args.max_inflight,
         cse=not args.no_cse, materialized_rows=args.materialized_rows,
+        metrics_path=args.metrics,
     )
     trainer = NGDBTrainer(model, kg, cfg, semantic_table=table,
                           semantic_cache=cache, ctx=ctx)
@@ -173,6 +188,14 @@ def main() -> None:
     t0 = time.time()
     trainer.train(args.steps, log_every=args.log_every)
     dt = time.time() - t0
+    if args.metrics and trainer.metrics_sink.enabled:
+        trainer.metrics_sink.write({"kind": "snapshot",
+                                    "metrics": get_registry().snapshot()})
+        trainer.metrics_sink.close()
+    if args.trace:
+        TRACER.write(args.trace)
+        TRACER.disable()
+        print(f"trace: wrote {args.trace} (load at ui.perfetto.dev)")
     qps = args.steps * args.batch_size / dt
     # pipeline mode requires the pooled executor; train() falls back to the
     # sync loop otherwise — report what actually ran.

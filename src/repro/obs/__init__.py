@@ -1,0 +1,14 @@
+"""Unified telemetry: metrics registry, span tracer, JSONL sink.
+
+See DESIGN.md §Observability. Import surface:
+
+    from repro.obs import get_registry, TRACER, MetricsSink
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricGroup,
+                                MetricsRegistry, get_registry)
+from repro.obs.sink import MetricsSink, read_jsonl
+from repro.obs.trace import TRACER, SpanTracer, validate_trace
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricGroup", "MetricsRegistry",
+           "get_registry", "MetricsSink", "read_jsonl", "TRACER",
+           "SpanTracer", "validate_trace"]

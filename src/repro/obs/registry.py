@@ -1,0 +1,382 @@
+"""Process-wide metrics registry (DESIGN.md §Observability).
+
+Every subsystem in the repo grew its own ad-hoc counters — ``CompileCache``
+hit/miss ints, ``SemanticCache`` staging totals, ``ServingEngine``'s latency
+deque — each with its own ``stats()`` dict and its own ``reset_counters()``
+path. This module is the single substrate underneath all of them:
+
+* **Metric primitives** — ``Counter`` (monotonic-ish, int-like so existing
+  ``self.hits += 1`` call sites keep working verbatim), ``Gauge`` (last-set
+  value: queue depth, batch occupancy), ``Histogram`` (bounded observation
+  window + lifetime count/sum: request latency). All carry a name and a
+  label tuple (``cache="schedule"``), so many instances of one component
+  aggregate cleanly in a snapshot.
+* **Lock-free fast path** — ``Counter.inc``/``Gauge.set``/``Histogram.
+  observe`` take no registry lock: a counter bump is one attribute add
+  (call sites that need exactness already hold their component's lock, as
+  before this refactor), a histogram observe is a GIL-atomic deque append.
+  The registry lock is touched only at metric CREATION and snapshot time.
+* **Snapshot / delta / reset** — ``snapshot()`` aggregates every live
+  metric by ``name{labels}`` key (counters/gauges sum across instances;
+  histograms contribute ``_count``/``_sum`` and window percentiles);
+  ``delta(before)`` subtracts the summable keys; ``reset()`` zeroes EVERY
+  counter and histogram in the process and then runs registered reset
+  hooks — the one path that fixes the historical counter-reset drift,
+  where ``ServingEngine.reset_counters`` and the trainer each reset a
+  different subset of the same underlying caches.
+* **Weak registration** — the registry holds weakrefs. Components own
+  their metrics (via a ``MetricGroup``); when a trainer or engine is
+  garbage-collected its metrics silently leave the snapshot, so the
+  process-wide registry never accumulates dead tests' counters.
+
+The existing ``stats()`` dict methods are unchanged in keys and meaning —
+they are now thin views reading these metrics (``int(self.hits)``).
+"""
+from __future__ import annotations
+
+import threading
+import weakref
+from collections import deque
+from typing import Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricGroup", "MetricsRegistry",
+           "get_registry"]
+
+
+def _val(x):
+    return x._v if isinstance(x, (Counter, Gauge)) else x
+
+
+class Counter:
+    """An int-like accumulator. ``c += 1`` (via ``__iadd__``) and ``c.inc()``
+    both bump it in place, so converting ``self.hits = 0`` call sites needs
+    no change beyond the declaration; comparisons/arithmetic against plain
+    numbers keep existing assertions (``cache.hits == 3``) working."""
+
+    kind = "counter"
+    __slots__ = ("name", "labels", "_v", "__weakref__")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...] = ()):
+        self.name = name
+        self.labels = labels
+        self._v = 0
+
+    # fast path — no locks (see module docstring)
+    def inc(self, n=1) -> None:
+        self._v += n
+
+    def __iadd__(self, n):
+        self._v += n
+        return self
+
+    def __isub__(self, n):
+        self._v -= n
+        return self
+
+    @property
+    def value(self):
+        return self._v
+
+    def read(self):
+        return self._v
+
+    def reset(self) -> None:
+        self._v = 0
+
+    # int-like views so existing call sites/assertions stay verbatim
+    def __int__(self):
+        return int(self._v)
+
+    def __index__(self):
+        return int(self._v)
+
+    def __float__(self):
+        return float(self._v)
+
+    def __bool__(self):
+        return bool(self._v)
+
+    def __eq__(self, other):
+        return self._v == _val(other)
+
+    def __lt__(self, other):
+        return self._v < _val(other)
+
+    def __le__(self, other):
+        return self._v <= _val(other)
+
+    def __gt__(self, other):
+        return self._v > _val(other)
+
+    def __ge__(self, other):
+        return self._v >= _val(other)
+
+    def __add__(self, other):
+        return self._v + _val(other)
+
+    def __radd__(self, other):
+        return _val(other) + self._v
+
+    def __sub__(self, other):
+        return self._v - _val(other)
+
+    def __rsub__(self, other):
+        return _val(other) - self._v
+
+    def __truediv__(self, other):
+        return self._v / _val(other)
+
+    def __rtruediv__(self, other):
+        return _val(other) / self._v
+
+    def __mul__(self, other):
+        return self._v * _val(other)
+
+    __rmul__ = __mul__
+    __hash__ = None  # mutable: never a dict key
+
+    def __repr__(self):
+        return f"Counter({metric_key(self)}={self._v})"
+
+
+class Gauge(Counter):
+    """Current-state value (queue depth, occupancy). ``reset()`` is a no-op:
+    zeroing a gauge would fabricate a state the system is not in — the
+    registry-wide reset zeroes history (counters, histograms), not state."""
+
+    kind = "gauge"
+    __slots__ = ()
+
+    def set(self, v) -> None:
+        self._v = v
+
+    def reset(self) -> None:
+        pass
+
+    def __repr__(self):
+        return f"Gauge({metric_key(self)}={self._v})"
+
+
+class Histogram:
+    """Bounded observation window + lifetime count/sum.
+
+    The window (``maxlen``-deque, GIL-atomic append) serves percentiles; the
+    lifetime count/sum serve rates and means over the whole run. ``window``
+    is surfaced in summaries as ``window_n`` so a p99 over 100 samples is
+    never mistaken for a p99 over the run."""
+
+    kind = "histogram"
+    __slots__ = ("name", "labels", "window", "_win", "_count", "_sum",
+                 "__weakref__")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...] = (),
+                 window: int = 8192):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.name = name
+        self.labels = labels
+        self.window = window
+        self._win: deque = deque(maxlen=window)
+        self._count = 0
+        self._sum = 0.0
+
+    def observe(self, v) -> None:
+        self._win.append(v)
+        self._count += 1
+        self._sum += v
+
+    def __len__(self):
+        return len(self._win)
+
+    @property
+    def count(self):
+        return self._count
+
+    @property
+    def sum(self):
+        return self._sum
+
+    def window_values(self) -> List[float]:
+        return list(self._win)
+
+    def summary(self) -> Dict[str, float]:
+        import numpy as np
+
+        win = np.asarray(self._win, dtype=np.float64)
+        out = {"count": int(self._count), "sum": float(self._sum),
+               "mean": float(self._sum / self._count) if self._count else 0.0,
+               "window_n": int(len(win)), "window": int(self.window)}
+        if len(win):
+            p50, p95, p99 = np.percentile(win, [50, 95, 99])
+            out.update(p50=float(p50), p95=float(p95), p99=float(p99),
+                       max=float(win.max()))
+        else:
+            out.update(p50=0.0, p95=0.0, p99=0.0, max=0.0)
+        return out
+
+    def reset(self) -> None:
+        self._win.clear()
+        self._count = 0
+        self._sum = 0.0
+
+    def __repr__(self):
+        return f"Histogram({metric_key(self)} n={self._count})"
+
+
+def metric_key(m) -> str:
+    """Stable flat key: ``name`` or ``name{k=v,...}`` (sorted labels)."""
+    if not m.labels:
+        return m.name
+    inner = ",".join(f"{k}={v}" for k, v in sorted(m.labels))
+    return f"{m.name}{{{inner}}}"
+
+
+class MetricGroup:
+    """One component's metrics: a shared name prefix + label set.
+
+    The component holds the group (strong refs); the registry holds only
+    weakrefs. ``reset()`` zeroes just this group — the building block every
+    component-level ``reset_counters()`` is now implemented with, so there
+    is exactly one reset mechanism in the codebase."""
+
+    def __init__(self, registry: "MetricsRegistry", prefix: str, **labels):
+        self._registry = registry
+        self.prefix = prefix
+        self.labels = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        self._metrics: List = []
+
+    def _add(self, m):
+        self._metrics.append(m)
+        self._registry.register(m)
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        lb = self.labels + tuple(sorted((k, str(v)) for k, v in labels.items()))
+        return self._add(Counter(f"{self.prefix}_{name}", lb))
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        lb = self.labels + tuple(sorted((k, str(v)) for k, v in labels.items()))
+        return self._add(Gauge(f"{self.prefix}_{name}", lb))
+
+    def histogram(self, name: str, window: int = 8192, **labels) -> Histogram:
+        lb = self.labels + tuple(sorted((k, str(v)) for k, v in labels.items()))
+        return self._add(Histogram(f"{self.prefix}_{name}", lb, window=window))
+
+    def reset(self, only: Optional[Iterable] = None) -> None:
+        """Zero this group's counters/histograms (gauges keep state). With
+        ``only``, reset just those metric objects — for components whose
+        public ``reset_counters`` deliberately preserves a subset (e.g. the
+        serving engine keeps submitted/completed across warmup resets)."""
+        targets = self._metrics if only is None else list(only)
+        for m in targets:
+            m.reset()
+
+    def metrics(self) -> List:
+        return list(self._metrics)
+
+
+class MetricsRegistry:
+    """Weak collection of every live metric in the process + reset hooks."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: List[weakref.ref] = []
+        self._hooks: List = []  # weakref.ref / weakref.WeakMethod
+
+    # --------------------------------------------------------- registration
+    def group(self, prefix: str, **labels) -> MetricGroup:
+        return MetricGroup(self, prefix, **labels)
+
+    def register(self, metric) -> None:
+        with self._lock:
+            self._metrics.append(weakref.ref(metric))
+
+    def on_reset(self, fn) -> None:
+        """Register a callback run after every registry-wide ``reset()`` —
+        components use this to re-baseline derived deltas (e.g. the serving
+        engine's scorer-trace baseline). Held weakly: a dead component's
+        hook disappears with it."""
+        ref = (weakref.WeakMethod(fn) if hasattr(fn, "__self__")
+               else weakref.ref(fn))
+        with self._lock:
+            self._hooks.append(ref)
+
+    def metrics(self) -> List:
+        """Live metrics (dead weakrefs pruned as a side effect)."""
+        with self._lock:
+            live, refs = [], []
+            for r in self._metrics:
+                m = r()
+                if m is not None:
+                    live.append(m)
+                    refs.append(r)
+            self._metrics = refs
+        return live
+
+    # ------------------------------------------------------------ snapshots
+    def snapshot(self) -> Dict[str, float]:
+        """Flat ``{key: number}`` view of every live metric, aggregated by
+        key: counters and gauges SUM across same-key instances (two engines'
+        ``serving_batches`` add up to the process total); histograms emit
+        ``_count``/``_sum`` (summed) plus window percentiles (merged)."""
+        import numpy as np
+
+        out: Dict[str, float] = {}
+        windows: Dict[str, list] = {}
+        for m in self.metrics():
+            key = metric_key(m)
+            if m.kind == "histogram":
+                out[key + "_count"] = out.get(key + "_count", 0) + m.count
+                out[key + "_sum"] = out.get(key + "_sum", 0.0) + m.sum
+                windows.setdefault(key, []).extend(m.window_values())
+            else:
+                out[key] = out.get(key, 0) + m.read()
+        for key, win in windows.items():
+            if win:
+                arr = np.asarray(win, dtype=np.float64)
+                p50, p95, p99 = np.percentile(arr, [50, 95, 99])
+                out.update({key + "_p50": float(p50), key + "_p95": float(p95),
+                            key + "_p99": float(p99)})
+            out[key + "_window_n"] = len(win)
+        return out
+
+    def delta(self, before: Dict[str, float]) -> Dict[str, float]:
+        """Current snapshot minus ``before`` for subtractable keys (counters,
+        gauges, histogram counts/sums); point-in-time keys (percentiles,
+        window sizes) pass through as-is."""
+        now = self.snapshot()
+        out = {}
+        for k, v in now.items():
+            if k.endswith(("_p50", "_p95", "_p99", "_window_n")):
+                out[k] = v
+            else:
+                out[k] = v - before.get(k, 0)
+        return out
+
+    # ---------------------------------------------------------------- reset
+    def reset(self) -> None:
+        """Zero EVERY counter and histogram in the process, then run reset
+        hooks. This is the registry-level reset the satellite demands: no
+        component-specific path can leave a sibling's counters drifted,
+        because there are no component-specific paths — only groups of
+        metrics this loop reaches."""
+        for m in self.metrics():
+            m.reset()
+        with self._lock:
+            hooks, refs = [], []
+            for r in self._hooks:
+                fn = r()
+                if fn is not None:
+                    hooks.append(fn)
+                    refs.append(r)
+            self._hooks = refs
+        for fn in hooks:
+            fn()
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-wide registry every component registers into."""
+    return _REGISTRY

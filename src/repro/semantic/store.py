@@ -43,6 +43,9 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
+from repro.obs.registry import get_registry
+from repro.obs.trace import TRACER
+
 _META = "meta.json"
 _VERSION = 1
 
@@ -430,14 +433,17 @@ class SemanticCache:
         self._lock = threading.Lock()
         self._planned_seq = 0
         self._applied_seq = 0
-        # Counters (compile_cache.py idiom).
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.stages = 0
-        self.stages_background = 0
-        self.rows_staged = 0
-        self.bytes_staged = 0
+        # Counters: registry metrics (compile_cache.py idiom, DESIGN.md
+        # §Observability) — still int-comparable attributes.
+        self._metrics = get_registry().group("sem_cache", cache=name)
+        self.hits = self._metrics.counter("hits")
+        self.misses = self._metrics.counter("misses")
+        self.evictions = self._metrics.counter("evictions")
+        self.stages = self._metrics.counter("stages")
+        self.stages_background = self._metrics.counter("stages_background")
+        self.rows_staged = self._metrics.counter("rows_staged")
+        self.bytes_staged = self._metrics.counter("bytes_staged")
+        self.resident_gauge = self._metrics.gauge("resident_rows")
 
     # ------------------------------------------------------------- planning
     def plan(self, ent_ids, background: bool = False) -> Optional[SemStage]:
@@ -491,6 +497,7 @@ class SemanticCache:
                 self.stages_background += 1
             self.rows_staged += m
             self.bytes_staged += m * self.dim * 4
+            self.resident_gauge.set(int((self._owner >= 0).sum()))
             self._planned_seq += 1
             seq = self._planned_seq
         # Store I/O, dequantize and the device put happen OUTSIDE the lock:
@@ -499,7 +506,8 @@ class SemanticCache:
         # reintroduce exactly the mid-step stall this cache eliminates. The
         # metadata above is already consistent — a subsequent plan builds on
         # it regardless of when these rows land.
-        rows = self.store.read_rows(missing)  # host gather + dequantize
+        with TRACER.span("store_io", rows=m):
+            rows = self.store.read_rows(missing)  # host gather + dequantize
         # Pad to a power of two so the apply scatter has a bounded signature
         # set (edge-repeat: duplicate slots write the same row).
         mp = 1 << int(np.ceil(np.log2(max(m, 1))))
@@ -552,6 +560,7 @@ class SemanticCache:
         self._ref[:] = False
         self._hand = 0
         self._planned_seq = self._applied_seq = 0
+        self.resident_gauge.set(0)
 
     # -------------------------------------------------------------- metrics
     @property
@@ -560,12 +569,13 @@ class SemanticCache:
 
     @property
     def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
+        n = int(self.hits) + int(self.misses)
+        return int(self.hits) / n if n else 0.0
 
     @property
     def prefetch_overlap_frac(self) -> float:
-        return self.stages_background / self.stages if self.stages else 0.0
+        n = int(self.stages)
+        return int(self.stages_background) / n if n else 0.0
 
     @property
     def device_resident_sem_bytes(self) -> int:
@@ -581,22 +591,21 @@ class SemanticCache:
             "name": self.name,
             "budget_rows": self.budget_rows,
             "resident_rows": self.resident_rows,
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
+            "hits": int(self.hits),
+            "misses": int(self.misses),
+            "evictions": int(self.evictions),
             "hit_rate": self.hit_rate,
-            "stages": self.stages,
-            "stages_background": self.stages_background,
-            "sync_stages": self.stages - self.stages_background,
+            "stages": int(self.stages),
+            "stages_background": int(self.stages_background),
+            "sync_stages": int(self.stages) - int(self.stages_background),
             "prefetch_overlap_frac": self.prefetch_overlap_frac,
-            "rows_staged": self.rows_staged,
-            "bytes_staged": self.bytes_staged,
+            "rows_staged": int(self.rows_staged),
+            "bytes_staged": int(self.bytes_staged),
             "device_resident_sem_bytes": self.device_resident_sem_bytes,
         }
 
     def reset_counters(self) -> None:
         """Zero counters (not residency) — e.g. after benchmark warmup."""
         with self._lock:
-            self.hits = self.misses = self.evictions = 0
-            self.stages = self.stages_background = 0
-            self.rows_staged = self.bytes_staged = 0
+            self._metrics.reset()
+            self.resident_gauge.set(int((self._owner >= 0).sum()))

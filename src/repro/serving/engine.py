@@ -56,7 +56,6 @@ import dataclasses
 import queue
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -66,6 +65,8 @@ import numpy as np
 from repro.core.compile_cache import CompileCache
 from repro.core.executor import PooledExecutor
 from repro.core.patterns import QueryInstance
+from repro.obs.registry import get_registry
+from repro.obs.trace import TRACER
 
 
 def topk_desc(scores: np.ndarray, k: int) -> np.ndarray:
@@ -163,6 +164,10 @@ class _Request:
     top_k: int
     future: Future
     t_submit: float
+    # Async-span id threaded submit -> flush -> dispatch -> complete. 0 when
+    # tracing is off. Coalesced duplicates keep DISTINCT ids (each opened at
+    # its own submit) while sharing one batch/encode/score span.
+    trace_id: int = 0
 
 
 @dataclasses.dataclass
@@ -195,12 +200,19 @@ class ServingEngine:
     def __init__(self, model, params, executor=None,
                  cfg: Optional[ServingConfig] = None, sem_cache=None,
                  sem_rows_fn=None, ctx=None, started: bool = True,
-                 mat_cache=None):
+                 mat_cache=None, latency_window: Optional[int] = None):
         self.model = model
         self.params = params
         self.cfg = cfg or ServingConfig()
+        if latency_window is not None:
+            # Constructor-level override so callers that never build a
+            # ServingConfig can still size the percentile window.
+            self.cfg = dataclasses.replace(self.cfg,
+                                           latency_window=latency_window)
         if self.cfg.max_batch < 1 or self.cfg.queue_depth < 1:
             raise ValueError("max_batch and queue_depth must be >= 1")
+        if self.cfg.latency_window < 1:
+            raise ValueError("latency_window must be >= 1")
         self.ctx = ctx
         self.executor = executor or PooledExecutor(model, b_max=256, ctx=ctx)
         if sem_cache is not None and sem_rows_fn is None:
@@ -226,19 +238,42 @@ class ServingEngine:
         self._stop = threading.Event()
         self._closed = False
         self._lock = threading.Lock()
-        self._lat_ms: deque = deque(maxlen=self.cfg.latency_window)
-        self._submitted = 0
-        self._completed = 0
-        self._batches = 0
-        self._batch_rows = 0
-        self._padded_rows = 0
-        self._coalesced = 0
-        self._failures = 0
-        self._flushes = {"size": 0, "age": 0, "drain": 0}
+        # Registry metrics (DESIGN.md §Observability): same counters the
+        # engine always kept, now visible in process-wide snapshots. The
+        # latency ring buffer is a Histogram whose window IS
+        # cfg.latency_window, reported as window_n in stats().
+        self._metrics = get_registry().group("serving")
+        self._latency = self._metrics.histogram(
+            "latency_ms", window=self.cfg.latency_window)
+        self._submitted = self._metrics.counter("submitted")
+        self._completed = self._metrics.counter("completed")
+        self._batches = self._metrics.counter("batches")
+        self._batch_rows = self._metrics.counter("batch_rows")
+        self._padded_rows = self._metrics.counter("padded_rows")
+        self._coalesced = self._metrics.counter("coalesced")
+        self._failures = self._metrics.counter("failures")
+        self._flushes = {k: self._metrics.counter("flushes", kind=k)
+                         for k in ("size", "age", "drain")}
+        self._queue_depth = self._metrics.gauge("queue_depth")
+        self._occupancy = self._metrics.gauge("batch_occupancy")
+        # After a registry-wide reset() the derived deltas (scorer traces,
+        # sharing) must re-baseline or they would go negative; the hook is
+        # held weakly, so a collected engine takes it along.
+        get_registry().on_reset(self._rebaseline)
         self.batch_log: List[BatchRecord] = []
         self._thread: Optional[threading.Thread] = None
         if started:
             self.start()
+
+    def _rebaseline(self) -> None:
+        """Registry-reset hook: zero the derived deltas that live outside
+        the registry (jit-trace counts, cumulative sharing totals)."""
+        self._scorer_traces0 = self._scorer.traces
+        self._sharing0 = dict(self.executor.sharing_stats())
+        with self._lock:
+            for k in list(self._flushes):
+                if k not in ("size", "age", "drain"):
+                    del self._flushes[k]
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
@@ -273,6 +308,8 @@ class ServingEngine:
         try:
             while True:
                 r = self._q.get_nowait()
+                if r.trace_id:
+                    TRACER.async_end("request", r.trace_id, failed=True)
                 r.future.set_exception(RuntimeError("serving engine closed"))
                 with self._lock:
                     self._completed += 1
@@ -300,13 +337,21 @@ class ServingEngine:
             if self._closed:
                 raise RuntimeError("serving engine is closed")
             self._submitted += 1
-        r = _Request(query, k, Future(), time.perf_counter())
+        trace_id = 0
+        if TRACER.enabled:
+            trace_id = TRACER.next_id()
+            TRACER.async_begin("request", trace_id, pattern=query.pattern,
+                               top_k=k)
+        r = _Request(query, k, Future(), time.perf_counter(), trace_id)
         try:
             self._q.put(r, timeout=timeout)
         except queue.Full:
             with self._lock:
                 self._submitted -= 1
+            if trace_id:
+                TRACER.async_end("request", trace_id, rejected=True)
             raise
+        self._queue_depth.set(self._q.qsize())
         # close() may have stopped the batcher and drained the queue between
         # our _closed check and the put; a straggler landing in the
         # now-unwatched queue must fail, not strand its future forever.
@@ -319,6 +364,7 @@ class ServingEngine:
 
     # -------------------------------------------------------------- batcher
     def _run(self) -> None:
+        TRACER.set_lane("serving batcher")
         while True:
             try:
                 first = self._q.get(timeout=0.05)
@@ -355,6 +401,9 @@ class ServingEngine:
                     batch.append(self._q.get(timeout=min(remaining, 0.05)))
                 except queue.Empty:
                     continue
+            self._queue_depth.set(self._q.qsize())
+            if TRACER.enabled:
+                TRACER.counter("serving_queue_depth", depth=self._q.qsize())
             self._execute(batch, flush)
 
     def _execute(self, batch: List[_Request], flush: str) -> None:
@@ -365,7 +414,9 @@ class ServingEngine:
         # whole batch at once, never an N-fold solo-retry storm of the same
         # allocation.
         try:
-            results = self._serve(batch, flush)
+            with TRACER.span("batch", n=len(batch), flush=flush,
+                             trace_ids=[r.trace_id for r in batch]):
+                results = self._serve(batch, flush)
         except Exception as e:
             if len(batch) > 1 and not isinstance(e, MemoryError):
                 # Isolate the poison request: one malformed query must not
@@ -376,6 +427,11 @@ class ServingEngine:
                     self._execute([r], "retry")
                 return
             for r in batch:
+                # End the span BEFORE resolving the future: a client that
+                # snapshots the trace right after its future resolves must
+                # never see a dangling request span.
+                if r.trace_id:
+                    TRACER.async_end("request", r.trace_id, failed=True)
                 r.future.set_exception(e)
             with self._lock:
                 self._failures += len(batch)
@@ -388,8 +444,12 @@ class ServingEngine:
             res["latency_ms"] = lat_ms
             res["batch_size"] = n
             with self._lock:
-                self._lat_ms.append(lat_ms)
+                self._latency.observe(lat_ms)
                 self._completed += 1
+            # Span end precedes set_result: once the future resolves, the
+            # trace must already contain the request's full b/e pair.
+            if r.trace_id:
+                TRACER.async_end("request", r.trace_id, latency_ms=lat_ms)
             r.future.set_result(res)
 
     def update_params(self, params) -> None:
@@ -477,31 +537,36 @@ class ServingEngine:
             # mat-cache bump: staging changes WHERE rows live, not their
             # values, so materialized rows stay valid.
             anchors = np.concatenate([q.anchors for q in padded])
-            stage = self.sem_cache.plan(anchors)
+            with TRACER.span("sem_prefetch", rows=len(anchors)):
+                stage = self.sem_cache.plan(anchors)
             if stage is not None:
                 params = self.sem_cache.apply_to(params, stage)
                 self.params = params
-        states = self._states_for(params, uniq, padded, n_real, mat_ver)
-        if self.sem_cache is not None:
-            scores = self.model.score_all_chunked(params, states,
-                                                  self.sem_rows_fn)
-        else:
-            scores = np.asarray(self._scorer(params, states))
+        with TRACER.span("encode", n=len(padded)):
+            states = self._states_for(params, uniq, padded, n_real, mat_ver)
+        with TRACER.span("score", n=len(padded)):
+            if self.sem_cache is not None:
+                scores = self.model.score_all_chunked(params, states,
+                                                      self.sem_rows_fn)
+            else:
+                scores = np.asarray(self._scorer(params, states))
         # Select per DISTINCT (row, k) group, not one k_max selection sliced
         # per request: argpartition at k_max can arrange boundary-tied ids
         # differently than argpartition at k, and the contract is exact
         # per-request equality with serve_batch(top_k=k). Mixed-k batches
         # are rare, so this is one topk_desc call in the common case.
-        sel_of: Dict[Tuple[int, int], np.ndarray] = {}
-        for i, r in enumerate(batch):
-            sel_of.setdefault((row_of[i], min(r.top_k, scores.shape[1])), None)
-        by_k: Dict[int, List[int]] = {}   # k -> unique computed rows
-        for row, k in sel_of:
-            by_k.setdefault(k, []).append(row)
-        for k, rows in by_k.items():
-            idx = topk_desc(scores[rows], k)
-            for j, row in enumerate(rows):
-                sel_of[(row, k)] = idx[j]
+        with TRACER.span("select", n=len(batch)):
+            sel_of: Dict[Tuple[int, int], np.ndarray] = {}
+            for i, r in enumerate(batch):
+                sel_of.setdefault(
+                    (row_of[i], min(r.top_k, scores.shape[1])), None)
+            by_k: Dict[int, List[int]] = {}   # k -> unique computed rows
+            for row, k in sel_of:
+                by_k.setdefault(k, []).append(row)
+            for k, rows in by_k.items():
+                idx = topk_desc(scores[rows], k)
+                for j, row in enumerate(rows):
+                    sel_of[(row, k)] = idx[j]
         results: List[Optional[Dict]] = [None] * len(batch)
         log_rows: List[Optional[Dict]] = [None] * n_real
         default_k = min(self.cfg.top_k, scores.shape[1])
@@ -529,7 +594,12 @@ class ServingEngine:
             self._batch_rows += len(padded)
             self._padded_rows += len(padded) - n_real
             self._coalesced += len(batch) - len(uniq)
-            self._flushes[flush] = self._flushes.get(flush, 0) + 1
+            self._occupancy.set(n_real / len(padded) if padded else 0.0)
+            fc = self._flushes.get(flush)
+            if fc is None:
+                fc = self._flushes[flush] = self._metrics.counter(
+                    "flushes", kind=flush)
+            fc.inc()
             if self.cfg.record_batches:
                 # The log holds the UNIQUE composition as executed (one
                 # result per computed row), so offline-oracle replay compares
@@ -553,43 +623,53 @@ class ServingEngine:
 
     def reset_counters(self, clear_log: bool = True) -> None:
         """Zero retrace/latency/flush counters (after warmup) — compiled
-        programs and cache contents are kept."""
+        programs and cache contents are kept. Scoped to THIS engine (and its
+        executor/caches): submitted/completed survive so ``close``'s drain
+        accounting stays truthful. ``obs.get_registry().reset()`` is the
+        process-wide variant (zeroes everything at once)."""
         self.executor.reset_cache_counters()
         if self.mat_cache is not None:
             self.mat_cache.reset_counters()
         self._scorer_traces0 = self._scorer.traces
         self._sharing0 = dict(self.executor.sharing_stats())
         with self._lock:
-            self._lat_ms.clear()
-            self._batches = self._batch_rows = self._padded_rows = 0
-            self._coalesced = 0
-            self._failures = 0
-            self._flushes = {"size": 0, "age": 0, "drain": 0}
+            self._latency.reset()
+            self._metrics.reset(only=[
+                self._batches, self._batch_rows, self._padded_rows,
+                self._coalesced, self._failures])
+            for k in list(self._flushes):
+                if k in ("size", "age", "drain"):
+                    self._flushes[k].reset()
+                else:
+                    del self._flushes[k]
             if clear_log:
                 self.batch_log = []
 
     def stats(self) -> Dict:
         with self._lock:
-            lat = np.asarray(self._lat_ms, dtype=np.float64)
+            lat = np.asarray(self._latency.window_values(), dtype=np.float64)
             out = {
-                "submitted": self._submitted,
-                "completed": self._completed,
-                "failures": self._failures,
-                "batches": self._batches,
-                "flushes": dict(self._flushes),
-                "mean_batch_size": (self._batch_rows / self._batches
+                "submitted": int(self._submitted),
+                "completed": int(self._completed),
+                "failures": int(self._failures),
+                "batches": int(self._batches),
+                "flushes": {k: int(c) for k, c in self._flushes.items()},
+                "mean_batch_size": (int(self._batch_rows) / int(self._batches)
                                     if self._batches else 0.0),
-                "padded_row_frac": (self._padded_rows / self._batch_rows
-                                    if self._batch_rows else 0.0),
+                "padded_row_frac": (
+                    int(self._padded_rows) / int(self._batch_rows)
+                    if self._batch_rows else 0.0),
                 # duplicate in-flight requests served off a co-batched twin's
                 # computation (same QueryInstance.key())
-                "coalesced": self._coalesced,
+                "coalesced": int(self._coalesced),
             }
         if len(lat):
             from repro.serving.loadgen import latency_summary
 
             out["latency_ms"] = {**latency_summary(lat),
-                                 "max": float(lat.max())}
+                                 "max": float(lat.max()),
+                                 "window_n": int(len(lat)),
+                                 "window": int(self._latency.window)}
         out["retraces"] = self.retraces()
         out["caches"] = self.executor.cache_stats()
         # Same window as the engine's own counters: delta since the last

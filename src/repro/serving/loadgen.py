@@ -19,6 +19,7 @@ composition the replay forms was already compiled.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence
@@ -26,6 +27,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.patterns import QueryInstance
+from repro.obs.trace import TRACER
 from repro.sampling.online import OnlineSampler
 
 
@@ -63,22 +65,54 @@ class LoadReport:
                 f"p99 {l['p99']:.1f} ms")
 
 
-def run_closed_loop(engine, queries: Sequence[QueryInstance],
-                    concurrency: int = 32, timeout: float = 120.0) -> LoadReport:
-    """Keep ``concurrency`` requests in flight until the workload drains."""
-    if concurrency < 1:
-        raise ValueError("concurrency must be >= 1")
-    results: List[Optional[Dict]] = [None] * len(queries)
+def _closed_window(engine, queries, indices, results, concurrency, timeout,
+                   lane: Optional[str] = None):
+    """One submitter's closed window over its share of the workload."""
+    if lane is not None:
+        TRACER.set_lane(lane)
     window: deque = deque()
-    t0 = time.perf_counter()
-    for i, q in enumerate(queries):
+    for i in indices:
         while len(window) >= concurrency:
             j, f = window.popleft()
             results[j] = f.result(timeout=timeout)
-        window.append((i, engine.submit(q)))
+        window.append((i, engine.submit(queries[i])))
     while window:
         j, f = window.popleft()
         results[j] = f.result(timeout=timeout)
+
+
+def run_closed_loop(engine, queries: Sequence[QueryInstance],
+                    concurrency: int = 32, timeout: float = 120.0,
+                    threads: int = 1) -> LoadReport:
+    """Keep ``concurrency`` requests in flight until the workload drains.
+
+    ``threads > 1`` splits the workload round-robin over that many client
+    threads, each keeping its share of the window in flight — a multi-client
+    probe (and, when tracing, one named "client N" lane per submitter in the
+    trace). ``threads=1`` is bit-for-bit the historical single-submitter
+    loop running on the calling thread."""
+    if concurrency < 1:
+        raise ValueError("concurrency must be >= 1")
+    if threads < 1:
+        raise ValueError("threads must be >= 1")
+    results: List[Optional[Dict]] = [None] * len(queries)
+    t0 = time.perf_counter()
+    if threads == 1:
+        TRACER.set_lane("client 0")
+        _closed_window(engine, queries, range(len(queries)), results,
+                       concurrency, timeout)
+    else:
+        per = max(concurrency // threads, 1)
+        ts = [threading.Thread(
+                  target=_closed_window,
+                  args=(engine, queries, range(w, len(queries), threads),
+                        results, per, timeout, f"client {w}"),
+                  daemon=True)
+              for w in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
     wall = time.perf_counter() - t0
     return LoadReport(
         mode="closed", results=results, wall_s=wall,

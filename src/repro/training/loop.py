@@ -34,6 +34,9 @@ from repro.core.executor import PooledExecutor, QueryLevelExecutor
 from repro.core.plan import CompiledPlan
 from repro.data.pipeline import batch_entity_ids
 from repro.core.patterns import TEMPLATES
+from repro.obs.registry import get_registry
+from repro.obs.sink import MetricsSink
+from repro.obs.trace import TRACER
 from repro.sampling.adaptive import AdaptiveDistribution, pattern_losses_from_batch
 from repro.sampling.online import OnlineSampler, SampledQuery
 from repro.training.checkpoint import CheckpointManager
@@ -64,6 +67,9 @@ class TrainConfig:
     #                                 of that many rows to the pooled
     #                                 executor's eval/encode path (training
     #                                 gradients never consume cached rows)
+    metrics_path: Optional[str] = None  # JSONL step-time breakdown sink
+    #                                 (per-step phase durations + bubble
+    #                                 fraction; None = disabled, zero cost)
 
 
 class NGDBTrainer:
@@ -120,6 +126,18 @@ class NGDBTrainer:
         self.step = 0
         self._train_fns = CompileCache(cfg.compile_cache_size, name="train_step")
         self.history: List[Dict] = []
+        # Step-time telemetry (DESIGN.md §Observability): cumulative
+        # main-thread phase seconds + the per-step JSONL sink. The sink is a
+        # no-op object when metrics_path is None, so instrumented paths need
+        # no gating.
+        self._obs = get_registry().group("trainer")
+        self._steps_done = self._obs.counter("steps")
+        self._phase_s = {
+            name: self._obs.counter("phase_seconds", phase=name)
+            for name in ("pipeline_wait", "sem_apply", "compile", "dispatch",
+                         "retire")}
+        self._inflight_gauge = self._obs.gauge("inflight")
+        self.metrics_sink = MetricsSink(cfg.metrics_path)
 
     # ------------------------------------------------------------------ fns
     def _split_frozen(self, params):
@@ -200,28 +218,44 @@ class NGDBTrainer:
     def train_step(self, batch: Optional[List[SampledQuery]] = None) -> Dict[str, float]:
         if batch is None:
             dist = self.adaptive.distribution() if self.adaptive else None
-            batch = self.sampler.sample_batch(self.cfg.batch_size, dist)
+            with TRACER.span("sample", n=self.cfg.batch_size):
+                batch = self.sampler.sample_batch(self.cfg.batch_size, dist)
         queries, pos, neg = self.sampler.to_training_arrays(batch, self.cfg.n_negatives)
+        phases: Dict[str, float] = {}
         if self.sem_cache is not None:
             # Sync mode stages on the critical path (the pipelined loop does
             # this on the scheduler thread instead — zero mid-step reads).
-            stage = self.sem_cache.plan(batch_entity_ids(queries, pos, neg))
+            tp = time.perf_counter()
+            with TRACER.span("sem_prefetch"):
+                stage = self.sem_cache.plan(batch_entity_ids(queries, pos, neg))
             if stage is not None:
                 self.params = self.sem_cache.apply_to(self.params, stage)
+            phases["sem_prefetch_s"] = time.perf_counter() - tp
         t0 = time.perf_counter()
         if isinstance(self.executor, PooledExecutor):
-            prepared = self.executor.prepare(queries)
+            with TRACER.span("schedule", n=len(queries)):
+                prepared = self.executor.prepare(queries)
+            phases["schedule_s"] = time.perf_counter() - t0
             pos = pos[prepared.order]
             neg = neg[prepared.order]
             steps, ans = prepared.device_args()
+            # A signature absent from the cache means THIS dispatch pays the
+            # jit trace+compile — label the span accordingly.
+            cold = prepared.signature not in self._train_fns
             fn = self._train_fn(prepared, example=(steps, ans, pos, neg))
+            td = time.perf_counter()
             # pos/neg go in as host numpy: the jit places them per its
             # in_shardings (one transfer straight into the compiled layout);
             # a jnp.asarray here would commit to device 0 first and force a
             # second reshard transfer at dispatch under a mesh ctx.
-            self.params, self.opt_state, loss, per_q = fn(
-                self.params, self.opt_state, steps, ans, pos, neg
-            )
+            with TRACER.span("compile" if cold else "dispatch"):
+                self.params, self.opt_state, loss, per_q = fn(
+                    self.params, self.opt_state, steps, ans, pos, neg
+                )
+            phases["compile_s" if cold else "dispatch_s"] = (
+                time.perf_counter() - td)
+            self._phase_s["compile" if cold else "dispatch"].inc(
+                phases["compile_s" if cold else "dispatch_s"])
             patterns = prepared.patterns
         else:  # query-level baseline: one fragmented pass per pattern group
             loss, per_q, patterns = self._query_level_step(queries, pos, neg)
@@ -230,7 +264,12 @@ class NGDBTrainer:
             # params must never be served (or inserted: version pinning in
             # insert() drops in-flight encodes started before this bump).
             self.mat_cache.bump_version("param_update")
-        loss = float(loss)
+        tr = time.perf_counter()
+        with TRACER.span("retire"):
+            loss = float(loss)
+        phases["retire_s"] = time.perf_counter() - tr
+        self._phase_s["retire"].inc(phases["retire_s"])
+        self._steps_done.inc()
         if self.adaptive:
             self.adaptive.update(pattern_losses_from_batch(patterns, per_q))
         self.step += 1
@@ -240,6 +279,11 @@ class NGDBTrainer:
             "queries_per_sec": len(queries) / max(time.perf_counter() - t0, 1e-9),
         }
         self.history.append(rec)
+        if self.metrics_sink.enabled:
+            # Separate record, not extra keys on rec: history is compared
+            # across runs by tests/benchmarks and must not change shape.
+            self.metrics_sink.write({"kind": "step", "mode": "sync", **rec,
+                                     **phases})
         if self.ckpt:
             self.ckpt.maybe_save(
                 self.step,
@@ -322,6 +366,7 @@ class NGDBTrainer:
         if self.cfg.pipeline and isinstance(self.executor, PooledExecutor):
             return self._train_pipelined(n_steps, log_every, batches=batches)
 
+        TRACER.set_lane("main dispatch")
         from repro.data.pipeline import BatchPrefetcher
 
         own = None
@@ -363,18 +408,35 @@ class NGDBTrainer:
         contains — ``self.params`` may already belong to a later dispatched
         step, and the retired step's own outputs are donated into the next
         dispatch (hence the explicit copy at dispatch time)."""
-        loss, per_q, patterns, n_queries, snap = pending
-        loss = float(loss)  # sync point: waits for that device step only
+        loss, per_q, patterns, n_queries, snap, phases = pending
+        tr = time.perf_counter()
+        with TRACER.span("retire"):
+            loss = float(loss)  # sync point: waits for that device step only
         now = time.perf_counter()
+        phases["retire_s"] = now - tr
+        self._phase_s["retire"].inc(phases["retire_s"])
         if self.adaptive:
             self.adaptive.update(pattern_losses_from_batch(patterns, per_q))
         self.step += 1
+        self._steps_done.inc()
         rec = {
             "step": self.step,
             "loss": loss,
             "queries_per_sec": n_queries / max(now - t_last, 1e-9),
         }
         self.history.append(rec)
+        if self.metrics_sink.enabled:
+            # Bubble fraction: main-thread time spent WAITING for the
+            # prefetcher (pf.next) over this step's wall time — the share of
+            # the loop the pipeline failed to hide host work in. Retire
+            # (device sync) is reported separately: a big retire_s means the
+            # DEVICE is the bottleneck, which is the pipeline working.
+            wall = max(now - t_last, 1e-9)
+            self.metrics_sink.write({
+                "kind": "step", "mode": "pipelined", **rec, **phases,
+                "bubble_frac": min(phases.get("wait_s", 0.0) / wall, 1.0),
+                "wall_s": wall,
+            })
         if log_every and self.step % log_every == 0:
             print(f"step {rec['step']:6d} loss {rec['loss']:.4f} "
                   f"q/s {rec['queries_per_sec']:.0f}")
@@ -430,24 +492,42 @@ class NGDBTrainer:
             _sys.setswitchinterval(self.cfg.gil_switch_interval)
         inflight: deque = deque()
         t_last = time.perf_counter()
+        TRACER.set_lane("main dispatch")
         try:
             for _ in range(n_steps):
-                item = pf.next()
+                tw = time.perf_counter()
+                # This wait IS the pipeline bubble: the prefetcher had no
+                # ready item, so the main thread idles instead of dispatching.
+                with TRACER.span("pipeline_wait"):
+                    item = pf.next()
+                wait_s = time.perf_counter() - tw
+                item.phases["wait_s"] = wait_s
+                self._phase_s["pipeline_wait"].inc(wait_s)
                 if item.sem_stage is not None:
                     # The scheduler thread already did the store read +
                     # device put (overlapped with step k); this is just the
                     # donated scatter, enqueued after step k's program — the
                     # in-order device stream makes eviction of step k's rows
                     # safe even while k is still executing.
-                    self.params = self.sem_cache.apply_to(self.params,
-                                                          item.sem_stage)
+                    ta = time.perf_counter()
+                    with TRACER.span("sem_apply"):
+                        self.params = self.sem_cache.apply_to(self.params,
+                                                              item.sem_stage)
+                    item.phases["sem_apply_s"] = time.perf_counter() - ta
+                    self._phase_s["sem_apply"].inc(item.phases["sem_apply_s"])
+                cold = item.prepared.signature not in self._train_fns
                 fn = self._train_fn(item.prepared,
                                     example=(item.steps, item.ans,
                                              item.pos, item.neg))
-                self.params, self.opt_state, loss, per_q = fn(
-                    self.params, self.opt_state, item.steps, item.ans,
-                    item.pos, item.neg,
-                )
+                td = time.perf_counter()
+                with TRACER.span("compile" if cold else "dispatch"):
+                    self.params, self.opt_state, loss, per_q = fn(
+                        self.params, self.opt_state, item.steps, item.ans,
+                        item.pos, item.neg,
+                    )
+                key = "compile" if cold else "dispatch"
+                item.phases[key + "_s"] = time.perf_counter() - td
+                self._phase_s[key].inc(item.phases[key + "_s"])
                 if self.mat_cache is not None:
                     # Dispatch replaced the params handle; scheduler-thread
                     # probes pinned to the old version stop matching and any
@@ -462,11 +542,14 @@ class NGDBTrainer:
                     snap = jax.tree.map(jnp.copy,
                                         (self.params, self.opt_state))
                 inflight.append((loss, per_q, item.patterns, item.n_queries,
-                                 snap))
+                                 snap, item.phases))
+                self._inflight_gauge.set(len(inflight))
                 while len(inflight) >= max(self.cfg.max_inflight, 1):
                     t_last = self._retire(inflight.popleft(), t_last, log_every)
+                    self._inflight_gauge.set(len(inflight))
             while inflight:
                 t_last = self._retire(inflight.popleft(), t_last, log_every)
+                self._inflight_gauge.set(len(inflight))
         finally:
             _sys.setswitchinterval(old_switch)
             pf.close()
