@@ -13,13 +13,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: tput,ops,sem,semstore,"
                          "adaptive,freebase,scaling,kernels,pipeline,serving,"
-                         "plan,obs")
+                         "plan,obs,autotune")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (adaptive, kernels_bench, obs, operator_speedup,
-                            plan, runtime_freebase, scaling, semantic,
-                            serving, throughput)
+    from benchmarks import (adaptive, autotune, kernels_bench, obs,
+                            operator_speedup, plan, runtime_freebase,
+                            scaling, semantic, serving, throughput)
 
     suites = [
         ("tput", "Table 3/1: operator-level vs query-level throughput",
@@ -35,7 +35,10 @@ def main() -> None:
         # root, so the perf trajectory accumulates across PRs.
         ("scaling", "Fig 7/Table 2: sharded-vs-single-device scaling sweep",
          scaling.run),
-        ("kernels", "Pallas kernel validation/micro", kernels_bench.run),
+        # Persists oracle-agreement + resolved-tile summary to
+        # BENCH_kernels.json at the repo root (committed across PRs).
+        ("kernels", "Pallas kernel validation/micro (BENCH_kernels.json)",
+         kernels_bench.run),
         ("pipeline", "Pipelined dataflow executor vs sync + compile cache",
          throughput.run_pipeline_compare),
         # Also persists its QPS/latency/invariant summary to
@@ -53,6 +56,12 @@ def main() -> None:
         ("obs", "§Observability: tracing overhead gate (off = bit-identical "
                 "+ free; on <= 2% pipelined throughput; traces validate)",
          obs.run),
+        # Persists its bit-identity/retrace/paired-ratio/cache-roundtrip
+        # summary to BENCH_autotune.json at the repo root (committed).
+        ("autotune", "§Autotuner: tile sweep gate (tuned bitwise vs default, "
+                     "zero retraces w/ kernel-aware bucketing, tuned never "
+                     "slower, persisted cache serves run 2)",
+         autotune.run),
     ]
     print("name,us_per_call,derived")
     for key, desc, fn in suites:

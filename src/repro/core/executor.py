@@ -48,7 +48,8 @@ class PooledExecutor:
     def __init__(self, model, b_max: int = 512, reuse_slots: bool = True,
                  policy: str = "max_fillness", cache_size: int = 128,
                  ctx=None, cse: bool = True, plan_cache: Optional[PlanCache] = None,
-                 plan_cache_size: int = 512, mat_cache=None):
+                 plan_cache_size: int = 512, mat_cache=None,
+                 tile_policy="auto"):
         from repro.distributed.context import ExecutionContext
 
         self.model = model
@@ -57,6 +58,17 @@ class PooledExecutor:
         self.policy = policy
         self.cse = cse
         self.ctx = ctx or ExecutionContext.single_device()
+        # Kernel-aware pool padding (DESIGN.md §Autotuner). "auto" snapshots
+        # a policy from the process tuner AT CONSTRUCTION — the policy (and
+        # its cache-key contribution) is then immutable for this executor's
+        # lifetime, so its signature universe stays closed. With an untuned
+        # tuner the snapshot is None and padding is bare pow2, bit-identical
+        # to the pre-autotuner engine.
+        if tile_policy == "auto":
+            from repro.kernels.autotune import pool_tile_policy
+
+            tile_policy = pool_tile_policy(model, b_max=b_max)
+        self.tile_policy = tile_policy
         self._sched_cache = CompileCache(cache_size, name="schedule")
         self._encode_cache = CompileCache(cache_size, name="encode")
         self._encode_jit_cache = CompileCache(cache_size, name="encode_jit")
@@ -106,6 +118,7 @@ class PooledExecutor:
             queries, model_name=self.model.name, b_max=self.b_max,
             reuse_slots=self.reuse_slots, policy=self.policy, cse=self.cse,
             sched_cache=self._sched_cache, plan_cache=self._plan_cache,
+            tile_policy=self.tile_policy,
         )
         with self._stats_lock:
             self._nodes_before += plan.report.nodes_before

@@ -14,7 +14,21 @@ bounded ``sem_cache`` buffer and ``sem_ids`` are cache SLOTS
 (``sem_slot[ids]``), distinct from the structural entity ids. In the
 full-resident layout both streams carry the same entity ids.
 
-Rows are processed in blocks of ``rows`` per grid step; callers pad ids.
+``rows`` selects the launch geometry (the autotuner's knob — DESIGN.md
+§Autotuner):
+
+* ``rows=1`` — the scalar-prefetch gather above: grid ``(n,)``, height-1
+  row DMAs addressed by the prefetched index streams. Minimal VMEM
+  footprint, one grid step per output row.
+* ``rows>1`` — blocked: the row gathers run as XLA takes (arbitrary-row
+  multi-height DMA is not expressible as a single BlockSpec index_map),
+  then ONE fuse kernel processes ``rows`` gathered rows per grid step —
+  ``n/rows`` launches amortize the per-step overhead that dominates small
+  fused dims.
+
+Both paths run the same ``_fuse_block`` body on [rows, ·] f32 tiles, so the
+per-row arithmetic — and therefore the output bits — is identical; the
+autotuner verifies exactly that before timing a candidate.
 """
 from __future__ import annotations
 
@@ -26,10 +40,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gather_fuse_kernel(ids_ref, sem_ids_ref, hstr_ref, hsem_ref, wp_ref,
-                        bp_ref, wf_ref, bf_ref, o_ref, *, rows: int):
-    h = hstr_ref[...].astype(jnp.float32)                    # [rows, d]
-    z = hsem_ref[...].astype(jnp.float32)                    # [rows, dl]
+def _fuse_block(h, z, wp_ref, bp_ref, wf_ref, bf_ref, o_ref):
+    """Shared Eq. 11+12 body: h [rows, d] structural, z [rows, dl] semantic
+    (already gathered into VMEM) -> o_ref [rows, d]."""
     zp = (
         jax.lax.dot_general(z, wp_ref[...].astype(jnp.float32),
                             (((1,), (0,)), ((), ())),
@@ -46,6 +59,20 @@ def _gather_fuse_kernel(ids_ref, sem_ids_ref, hstr_ref, hsem_ref, wp_ref,
     o_ref[...] = (jax.nn.sigmoid(y) * 2.0 - 1.0).astype(o_ref.dtype)
 
 
+def _gather_fuse_kernel(ids_ref, sem_ids_ref, hstr_ref, hsem_ref, wp_ref,
+                        bp_ref, wf_ref, bf_ref, o_ref):
+    _fuse_block(hstr_ref[...].astype(jnp.float32),
+                hsem_ref[...].astype(jnp.float32),
+                wp_ref, bp_ref, wf_ref, bf_ref, o_ref)
+
+
+def _fuse_only_kernel(hstr_ref, hsem_ref, wp_ref, bp_ref, wf_ref, bf_ref,
+                      o_ref):
+    _fuse_block(hstr_ref[...].astype(jnp.float32),
+                hsem_ref[...].astype(jnp.float32),
+                wp_ref, bp_ref, wf_ref, bf_ref, o_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("rows", "interpret"))
 def gather_fuse_pallas(
     ids: jnp.ndarray,      # [n] int32 — row indices into h_str
@@ -58,22 +85,57 @@ def gather_fuse_pallas(
     sem_ids: jnp.ndarray = None,  # [n] int32 rows into h_sem (cache slots);
     #                               None = same as ``ids`` (full-resident)
     *,
-    rows: int = 8,
+    rows: int = 1,
     interpret: bool = False,
 ) -> jnp.ndarray:
     n = ids.shape[0]
     E, d = h_str.shape
     _, dl = h_sem.shape
     dp = wp.shape[1]
-    assert n % rows == 0, (n, rows)
+    if rows < 1:
+        raise ValueError(f"rows must be >= 1, got rows={rows}")
+    if n % rows != 0:
+        raise ValueError(
+            f"gather_fuse: ids length n={n} must be a multiple of the row "
+            f"block rows={rows} (the ops.gather_fuse wrapper pads for you)")
+    if wf.shape[0] != d + dp:
+        raise ValueError(
+            f"gather_fuse: fuse weight rows {wf.shape[0]} != d+dp = "
+            f"{d}+{dp} = {d + dp}")
     if sem_ids is None:
         sem_ids = ids
-    assert sem_ids.shape == ids.shape, (sem_ids.shape, ids.shape)
-    # Block index i selects rows [ids[i*rows + r] for r in range(rows)]; with
-    # a row-blocked table BlockSpec the index_map returns the *row block* to
-    # DMA. We gather row-by-row (block height 1) and let the grid supply the
-    # row position — the standard Pallas scalar-prefetch gather pattern. The
-    # two scalar-prefetch streams feed the two tables independently.
+    if sem_ids.shape != ids.shape:
+        raise ValueError(
+            f"gather_fuse: sem_ids shape {sem_ids.shape} != ids shape "
+            f"{ids.shape}")
+
+    if rows > 1:
+        # Blocked path: gather XLA-side (dynamic rows), fuse in [rows, ·]
+        # tiles — grid (n/rows,). Same _fuse_block arithmetic per row.
+        hs = h_str[ids]                                     # [n, d]
+        zs = h_sem[sem_ids]                                 # [n, dl]
+        return pl.pallas_call(
+            _fuse_only_kernel,
+            grid=(n // rows,),
+            in_specs=[
+                pl.BlockSpec((rows, d), lambda i: (i, 0)),
+                pl.BlockSpec((rows, dl), lambda i: (i, 0)),
+                pl.BlockSpec((dl, dp), lambda i: (0, 0)),
+                pl.BlockSpec((1, dp), lambda i: (0, 0)),
+                pl.BlockSpec((d + dp, d), lambda i: (0, 0)),
+                pl.BlockSpec((1, d), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((n, d), h_str.dtype),
+            interpret=interpret,
+        )(hs, zs, wp, bp.reshape(1, dp), wf, bf.reshape(1, d))
+
+    # rows == 1: scalar-prefetch gather. Block index i selects row ids[i];
+    # with a row-blocked table BlockSpec the index_map returns the *row
+    # block* to DMA. We gather row-by-row (block height 1) and let the grid
+    # supply the row position — the standard Pallas scalar-prefetch gather
+    # pattern. The two scalar-prefetch streams feed the two tables
+    # independently.
     grid = (n,)
 
     def str_map(i, ids_ref, sem_ids_ref):
@@ -86,7 +148,7 @@ def gather_fuse_pallas(
         return (0, 0)
 
     out = pl.pallas_call(
-        functools.partial(_gather_fuse_kernel, rows=1),
+        _gather_fuse_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,

@@ -60,7 +60,20 @@ def intersect_pallas(
     n, k, d = x.shape
     hd = w1.shape[1]
     pad = w2.shape[1]
-    assert n % bn == 0, (n, bn)
+    # Explicit errors (not asserts — those vanish under `python -O`) naming
+    # the offending dim and the multiple it must satisfy.
+    if n % bn != 0:
+        raise ValueError(
+            f"intersect: pool rows n={n} must be a multiple of the row tile "
+            f"bn={bn} (the ops.intersect wrapper pads for you)")
+    if w1.shape[0] != d:
+        raise ValueError(
+            f"intersect: attention MLP input dim {w1.shape[0]} != state "
+            f"dim d={d}")
+    if w2.shape[0] != hd:
+        raise ValueError(
+            f"intersect: logit head input dim {w2.shape[0]} != hidden dim "
+            f"hd={hd}")
     grid = (n // bn,)
     return pl.pallas_call(
         functools.partial(_intersect_kernel, k=k),

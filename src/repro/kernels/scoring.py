@@ -59,7 +59,23 @@ def scoring_pallas(
     """q [B, d], e [N, d] -> [B, N]. B % bm == N % bn == d % bk == 0."""
     B, d = q.shape
     N, d2 = e.shape
-    assert d == d2 and B % bm == 0 and N % bn == 0 and d % bk == 0, (q.shape, e.shape)
+    # Explicit errors (not asserts — those vanish under `python -O`) naming
+    # the offending dim and the multiple it must satisfy.
+    if d != d2:
+        raise ValueError(
+            f"scoring: q feature dim d={d} != e feature dim d={d2}")
+    if B % bm != 0:
+        raise ValueError(
+            f"scoring: q rows B={B} must be a multiple of the row tile "
+            f"bm={bm} (the ops.scoring wrapper pads for you)")
+    if N % bn != 0:
+        raise ValueError(
+            f"scoring: e rows N={N} must be a multiple of the column tile "
+            f"bn={bn} (the ops.scoring wrapper pads for you)")
+    if d % bk != 0:
+        raise ValueError(
+            f"scoring: feature dim d={d} must be a multiple of the k tile "
+            f"bk={bk} (the ops.scoring wrapper pads for you)")
     nk = d // bk
     grid = (B // bm, N // bn, nk)
     return pl.pallas_call(

@@ -139,6 +139,11 @@ def main() -> None:
                     help="write a final registry snapshot (engine counters, "
                          "latency histogram, cache stats) as JSONL; "
                          "summarize with python -m repro.obs.report")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="persisted kernel-tile autotune cache (DESIGN.md "
+                         "§Autotuner): tuned configs load from PATH and the "
+                         "serving executor pads pools kernel-aware; also the "
+                         "default via REPRO_AUTOTUNE_CACHE (run.sh sets it)")
     args = ap.parse_args()
 
     ctx = make_execution_context(args.mesh, profile=args.profile)
@@ -172,6 +177,17 @@ def main() -> None:
             print(f"loaded checkpoint step={restored[0]}")
             if cache is not None:
                 cache.reset()  # restored cache buffers: nothing resident yet
+
+    if args.autotune_cache:
+        # Must land before the executor exists: it snapshots its kernel-aware
+        # tile policy from the process tuner at construction.
+        from repro.kernels import autotune as kat
+
+        tuner = kat.KernelTuner(path=args.autotune_cache)
+        kat.set_tuner(tuner)
+        if len(tuner):
+            print(f"autotune: {len(tuner)} tuned configs loaded "
+                  f"from {tuner.path}")
 
     executor = PooledExecutor(model, b_max=256, ctx=ctx, cse=not args.no_cse)
     mat_cache = None

@@ -129,6 +129,16 @@ def main() -> None:
                     help="write per-step phase durations + bubble fraction "
                          "as JSONL, with a final registry snapshot record; "
                          "summarize with python -m repro.obs.report")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="persisted kernel-tile autotune cache (DESIGN.md "
+                         "§Autotuner): tuned tile configs load from PATH and "
+                         "make pool padding kernel-aware; also the default "
+                         "via REPRO_AUTOTUNE_CACHE (run.sh sets it)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the bounded tile sweep for this model/shape "
+                         "regime before training (results persist to "
+                         "--autotune-cache when given); without this flag "
+                         "only already-tuned configs are used")
     args = ap.parse_args()
     if args.semantic_store:
         args.semantic = True
@@ -172,6 +182,24 @@ def main() -> None:
     model = make_model(args.model, ModelConfig(dim=args.dim, gamma=12.0,
                                                semantic_dim=sem_dim,
                                                entity_pad=max(1, ctx.n_devices)))
+    # Kernel autotuning must be settled BEFORE the trainer exists: the
+    # executor snapshots its kernel-aware tile policy at construction.
+    if args.autotune_cache or args.autotune:
+        from repro.kernels import autotune as kat
+
+        tuner = kat.KernelTuner(path=args.autotune_cache) \
+            if args.autotune_cache else kat.get_tuner()
+        if args.autotune_cache:
+            kat.set_tuner(tuner)
+        if args.autotune:
+            t0 = time.time()
+            n_sw = kat.tune_for_model(model, tuner, batch=args.batch_size)
+            print(f"autotune: {n_sw} sweeps in {time.time()-t0:.1f}s, "
+                  f"{len(tuner)} cached configs"
+                  + (f" @ {tuner.path}" if tuner.path else ""))
+        elif len(tuner):
+            print(f"autotune: {len(tuner)} tuned configs loaded"
+                  + (f" from {tuner.path}" if tuner.path else ""))
     cfg = TrainConfig(
         batch_size=args.batch_size, n_negatives=args.negatives,
         adam=AdamConfig(lr=args.lr), adaptive=args.adaptive,
