@@ -1,0 +1,259 @@
+"""§LiveStore gate: live KG writes under serving load (BENCH_live.json).
+
+Drives the full live-write surface end to end and asserts the four
+§LiveStore invariants (DESIGN.md §LiveStore):
+
+* **continuity** — a closed-loop replay runs THROUGH a concurrent write
+  burst (graph commits + entity growth + background fine-tunes publishing
+  params mid-flight) with zero failed requests;
+* **pinned replay** — requests pinned to a retained graph version are
+  bit-identical to the offline ``serve_batch`` oracle run on the params
+  that were live when that version was admitted, even after later writes
+  and param publishes land;
+* **staleness bound** — a pin that falls more than ``max_staleness_versions``
+  behind is shed with the typed ``StaleVersionError`` (accounted as
+  ``stale_sheds``, never ``failures``) and serves zero rows;
+* **maintenance determinism** — the background incremental fine-tune equals
+  a synchronous rerun from the recorded (params, triples, seed) bitwise,
+  and the maintained params score the written neighborhood within tolerance
+  of a from-scratch fine-tune of the pre-write params on the same triples.
+
+The summary lands in ``BENCH_live.json`` at the repo root (committed, so
+the live-path trajectory accumulates across PRs); any violated invariant
+publishes ``ok: false`` BEFORE raising, so a stale green verdict can never
+survive a crashed run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/live.py`
+    _root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import MaterializedSubqueryCache, PooledExecutor
+from repro.data import load_dataset
+from repro.launch.serve import serve_batch
+from repro.models import ModelConfig, make_model
+from repro.serving import (LiveNGDB, ServingConfig, ServingEngine,
+                           StaleVersionError, make_workload, run_closed_loop)
+from repro.training.loop import incremental_finetune
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_live.json")
+
+
+def _fresh_rows(kg, rng, n):
+    cand = np.stack([rng.integers(0, kg.n_entities, 8 * n),
+                     rng.integers(0, kg.n_relations, 8 * n),
+                     rng.integers(0, kg.n_entities, 8 * n)], axis=1)
+    return np.unique(cand[~kg.contains(cand)], axis=0)[:n]
+
+
+def _strip(r):
+    return {k: v for k, v in r.items() if k not in ("latency_ms",
+                                                    "batch_size")}
+
+
+def run(requests: int = 96, max_batch: int = 8, dim: int = 16,
+        model_name: str = "gqe", dataset: str = "FB15k", bound: int = 3,
+        writes: int = 6, out_path: str = _DEFAULT_OUT) -> dict:
+    summary = {"ok": False, "suite": "live", "model": model_name,
+               "dataset": dataset, "requests": 0, "failures": []}
+
+    def publish():
+        with open(out_path, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+        print(f"# wrote {out_path}")
+
+    try:
+        _run_inner(summary, requests, max_batch, dim, model_name, dataset,
+                   bound, writes)
+        summary["ok"] = not summary["failures"]
+    except BaseException as e:
+        # Publish the red verdict first: a crashed sweep must not leave a
+        # stale ok=true on disk for CI's ok-check to read.
+        summary["failures"].append(f"{type(e).__name__}: {e}")
+        publish()
+        raise
+    publish()
+    return summary
+
+
+def _run_inner(summary, requests, max_batch, dim, model_name, dataset,
+               bound, writes) -> None:
+    kg, _, _ = load_dataset(dataset)
+    workload = make_workload(kg, requests, seed=11)
+    model = make_model(model_name, ModelConfig(dim=dim, gamma=6.0))
+    params = model.init_params(jax.random.PRNGKey(0), kg.n_entities,
+                               kg.n_relations)
+    base_params = params
+    mat = MaterializedSubqueryCache(256)
+    mat.watch_kg(kg)
+    cfg = ServingConfig(max_batch=max_batch, max_wait_ms=5.0, top_k=10,
+                        queue_depth=256, max_staleness_versions=bound)
+    engine = ServingEngine(model, params,
+                           executor=PooledExecutor(model, b_max=256),
+                           cfg=cfg, kg=kg, mat_cache=mat)
+    live = LiveNGDB(model, kg, engine, finetune_steps=2, seed=0)
+    rng = np.random.default_rng(17)
+
+    # -- continuity: closed loop THROUGH a live write burst ---------------
+    run_closed_loop(engine, workload, concurrency=max_batch)  # warmup
+    engine.reset_counters()
+    done = threading.Event()
+
+    def _burst():
+        for i in range(writes):
+            # one burst also grows the entity table, exercising the
+            # params/store/graph growth path under load
+            if i == writes // 2:
+                n0 = kg.n_entities
+                live.write(np.array([[n0, 0, 0], [n0 + 1, 1, n0]]),
+                           n_new_entities=2)
+            else:
+                live.write(_fresh_rows(kg, rng, 4))
+            time.sleep(0.01)
+        done.set()
+
+    writer = threading.Thread(target=_burst, name="live-writer")
+    t0 = time.perf_counter()
+    writer.start()
+    rep = run_closed_loop(engine, workload, concurrency=max_batch)
+    while not done.is_set():       # keep traffic up until every write lands
+        rep2 = run_closed_loop(engine, workload[:max_batch],
+                               concurrency=max_batch)
+        assert len(rep2.results) == max_batch
+    writer.join()
+    live.flush()
+    dt = time.perf_counter() - t0
+    st = engine.stats()
+    summary["requests"] = int(st["completed"])
+    emit(f"live/{dataset}/{model_name}/qps_through_writes",
+         1e6 / max(rep.qps, 1e-9), f"qps={rep.qps:.0f}")
+    if st["failures"] != 0 or len(rep.results) != requests:
+        summary["failures"].append(
+            f"continuity: {st['failures']} failed requests, "
+            f"{len(rep.results)}/{requests} served through the write burst")
+    n_fresh = sum(r.n_written for r in live.receipts)
+    if live.finetunes_done != sum(1 for r in live.receipts if r.n_written):
+        summary["failures"].append(
+            f"maintenance: {live.finetunes_done} fine-tunes for "
+            f"{n_fresh} fresh triples across {len(live.receipts)} bursts")
+    summary.update({
+        "write_bursts": len(live.receipts), "fresh_triples": int(n_fresh),
+        "graph_version_after_burst": int(kg.graph_version),
+        "finetunes": int(live.finetunes_done),
+        "burst_wall_s": round(dt, 2),
+    })
+
+    # -- pinned replay: bit-identical to the snapshot-pinned oracle -------
+    pin = kg.graph_version
+    pinned_params = engine.params          # live params admitted at `pin`
+    qs = [workload[i] for i in rng.integers(len(workload), size=16)]
+    live.write(_fresh_rows(kg, rng, 4))    # later write the pin must ignore
+    live.flush()                           # ...and a later param publish
+    got = [_strip(engine.submit(q, pin_version=pin).result(timeout=120))
+           for q in qs]
+    oracle, _ = serve_batch(model, pinned_params,
+                            PooledExecutor(model, b_max=256), qs, top_k=10)
+    mismatches = sum(g != _strip(w) for g, w in zip(got, oracle))
+    if mismatches:
+        summary["failures"].append(
+            f"pinned replay: {mismatches}/{len(qs)} rows differ from the "
+            f"snapshot-pinned offline oracle at version {pin}")
+    summary["pinned_replay_rows"] = len(qs)
+    summary["pinned_version"] = int(pin)
+
+    # -- staleness bound: out-of-bound pins shed, zero stale rows ---------
+    for _ in range(bound + 1):             # push `pin` out of the bound
+        live.write(_fresh_rows(kg, rng, 2))
+    live.flush()
+    sheds = 0
+    for q in qs[:4]:
+        try:
+            engine.submit(q, pin_version=pin)
+            summary["failures"].append(
+                f"staleness: pin {pin} admitted at version "
+                f"{kg.graph_version} with bound {bound}")
+        except StaleVersionError:
+            sheds += 1
+    st = engine.stats()
+    if st["stale_sheds"] != sheds or st["failures"] != 0:
+        summary["failures"].append(
+            f"staleness accounting: {sheds} typed sheds but stats say "
+            f"stale_sheds={st['stale_sheds']} failures={st['failures']}")
+    summary["stale_sheds"] = int(st["stale_sheds"])
+    summary["version_lag_served"] = {str(k): v for k, v
+                                     in sorted(st["version_lag_served"].items())}
+
+    # -- maintenance determinism + loss vs from-scratch rebuild -----------
+    pre = engine.params
+    receipt = live.write(_fresh_rows(kg, rng, 4))
+    live.flush()
+    sync, sync_losses = incremental_finetune(
+        model, pre, receipt.fresh_triples, steps=live.finetune_steps,
+        lr=live.finetune_lr, n_negatives=live.n_negatives,
+        seed=live.seed + receipt.graph_version)
+    for k in sync:
+        if not np.array_equal(np.asarray(engine.params[k]),
+                              np.asarray(sync[k])):
+            summary["failures"].append(
+                f"determinism: background fine-tune of '{k}' differs from "
+                f"the synchronous rerun")
+    # touched neighborhood = everything written this run; probe the loss of
+    # the incrementally-maintained params vs a from-scratch fine-tune of
+    # the NEVER-maintained base params on the same triples.
+    touched = np.concatenate([r.fresh_triples for r in live.receipts
+                              if r.n_written])
+    _, probe_inc = incremental_finetune(model, engine.params, touched,
+                                        steps=1, seed=1)
+    rebuilt, _ = incremental_finetune(
+        model, base_params, touched, lr=live.finetune_lr,
+        steps=live.finetune_steps * max(1, live.finetunes_done), seed=1)
+    _, probe_reb = incremental_finetune(model, rebuilt, touched,
+                                        steps=1, seed=1)
+    tol = 2.0
+    if probe_inc[0] > probe_reb[0] + tol:
+        summary["failures"].append(
+            f"maintenance loss: incremental {probe_inc[0]:.3f} vs "
+            f"from-scratch rebuild {probe_reb[0]:.3f} (tol {tol})")
+    summary.update({
+        "finetune_loss_first": round(float(sync_losses[0]), 4),
+        "finetune_loss_last": round(float(sync_losses[-1]), 4),
+        "touched_loss_incremental": round(float(probe_inc[0]), 4),
+        "touched_loss_rebuild": round(float(probe_reb[0]), 4),
+        "graph_version_final": int(kg.graph_version),
+    })
+    emit(f"live/{dataset}/{model_name}/finetune_loss",
+         float(probe_inc[0]) * 1e3,
+         f"inc={probe_inc[0]:.3f} rebuild={probe_reb[0]:.3f}")
+    live.close()
+    engine.close()
+    if summary["failures"]:
+        raise AssertionError("; ".join(summary["failures"]))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--model", default="gqe")
+    ap.add_argument("--dataset", default="FB15k")
+    ap.add_argument("--bound", type=int, default=3)
+    ap.add_argument("--writes", type=int, default=6)
+    args = ap.parse_args()
+    run(requests=args.requests, max_batch=args.max_batch, dim=args.dim,
+        model_name=args.model, dataset=args.dataset, bound=args.bound,
+        writes=args.writes)

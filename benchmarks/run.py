@@ -13,11 +13,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: tput,ops,sem,semstore,"
                          "adaptive,freebase,scaling,kernels,pipeline,serving,"
-                         "plan,obs,autotune")
+                         "plan,obs,autotune,live")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (adaptive, autotune, kernels_bench, obs,
+    from benchmarks import (adaptive, autotune, kernels_bench, live, obs,
                             operator_speedup, plan, runtime_freebase,
                             scaling, semantic, serving, throughput)
 
@@ -62,6 +62,13 @@ def main() -> None:
                      "zero retraces w/ kernel-aware bucketing, tuned never "
                      "slower, persisted cache serves run 2)",
          autotune.run),
+        # Persists its continuity/pinned-replay/staleness/determinism
+        # summary to BENCH_live.json at the repo root (committed across PRs).
+        ("live", "§LiveStore: live KG writes under serving load (zero "
+                 "failed requests, pinned replay bitwise vs snapshot "
+                 "oracle, typed staleness sheds, deterministic background "
+                 "fine-tune)",
+         live.run),
     ]
     print("name,us_per_call,derived")
     for key, desc, fn in suites:

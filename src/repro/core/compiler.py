@@ -297,6 +297,7 @@ def compile_batch(
     sched_cache=None,
     plan_cache: Optional[PlanCache] = None,
     tile_policy=None,
+    graph_version: int = -1,
 ) -> CompiledPlan:
     """Compile one query batch into a ``CompiledPlan``.
 
@@ -311,9 +312,17 @@ def compile_batch(
     padding to the kernel-aware rule (see ``scheduler.bucket_size``). Its
     ``key()`` is folded into BOTH cache keys — two executors holding
     different tunings can never alias a schedule, so the signature universe
-    stays closed per policy and steady-state retraces stay at zero."""
+    stays closed per policy and steady-state retraces stay at zero.
+
+    ``graph_version`` (the KG's monotonic write counter; -1 = not pinned)
+    enters ``cfg_key`` — the PLAN-cache key only, never the schedule-cache
+    ``key`` below — so a version-pinned query can never replay a plan
+    admitted under a different graph state, while schedules (pure topology,
+    graph-independent) still hit across writes and device retraces stay at
+    zero through a write burst."""
     tile_key = tile_policy.key() if tile_policy is not None else ()
-    cfg_key = (model_name, b_max, reuse_slots, policy, cse, tile_key)
+    cfg_key = (model_name, b_max, reuse_slots, policy, cse, tile_key,
+               graph_version)
     exact_key = None
     if plan_cache is not None:
         exact_key = (tuple(q.key() for q in queries), cfg_key)

@@ -109,16 +109,18 @@ class PooledExecutor:
             self.mat_cache.reset_counters()
 
     # ------------------------------------------------------------------ prep
-    def prepare(self, queries: Sequence[QueryInstance]) -> PreparedBatch:
+    def prepare(self, queries: Sequence[QueryInstance],
+                graph_version: int = -1) -> PreparedBatch:
         """Thin wrapper over the plan compiler: canonicalize, CSE-merge
         shared subqueries (unless ``cse=False``), lower through the
         Max-Fillness scheduler, memoizing by deduped topology in the
-        executor's schedule cache."""
+        executor's schedule cache. ``graph_version`` (-1 = unpinned) is
+        folded into the plan-cache key only — see ``compile_batch``."""
         plan = compile_batch(
             queries, model_name=self.model.name, b_max=self.b_max,
             reuse_slots=self.reuse_slots, policy=self.policy, cse=self.cse,
             sched_cache=self._sched_cache, plan_cache=self._plan_cache,
-            tile_policy=self.tile_policy,
+            tile_policy=self.tile_policy, graph_version=graph_version,
         )
         with self._stats_lock:
             self._nodes_before += plan.report.nodes_before
@@ -205,7 +207,7 @@ class PooledExecutor:
         return fn
 
     def encode(self, params, queries: Sequence[QueryInstance],
-               compiled: bool = False) -> jnp.ndarray:
+               compiled: bool = False, graph_version: int = -1) -> jnp.ndarray:
         """Convenience path returning states in ORIGINAL query order.
 
         ``compiled=False`` (default) runs the encode closure eagerly —
@@ -219,11 +221,17 @@ class PooledExecutor:
         encoded (then inserted back). Pooled operators are row-wise and
         composition-independent, so subset encode rows are bitwise the rows
         the full batch would have produced — cache on/off is invisible
-        GIVEN the version discipline (callers bump on every param update)."""
+        GIVEN the version discipline (callers bump on every param update).
+
+        ``graph_version`` (-1 = unpinned) is folded into the materialized
+        row keys and the plan-cache key, so a version-pinned replay can
+        never be served a row admitted under a different graph state."""
         cache = self.mat_cache
         if cache is None or len(queries) == 0:
-            return self._encode_fresh(params, queries, compiled)
-        keys = [q.key() for q in queries]
+            return self._encode_fresh(params, queries, compiled,
+                                      graph_version)
+        keys = [q.key() if graph_version < 0
+                else q.key() + (graph_version,) for q in queries]
         ver = cache.version
         rows = cache.lookup(keys, version=ver)
         if len(rows) == len(queries):
@@ -238,7 +246,8 @@ class PooledExecutor:
             b = 1 << (len(sub) - 1).bit_length()
             sub = sub + [sub[-1]] * (b - len(sub))
         fresh = np.asarray(
-            self._encode_fresh(params, sub, compiled))[: len(miss)]
+            self._encode_fresh(params, sub, compiled,
+                               graph_version))[: len(miss)]
         cache.insert([keys[i] for i in miss], fresh, version=ver)
         out = np.empty((len(queries), fresh.shape[1]), dtype=fresh.dtype)
         for j, i in enumerate(miss):
@@ -248,8 +257,8 @@ class PooledExecutor:
         return jnp.asarray(out)
 
     def _encode_fresh(self, params, queries: Sequence[QueryInstance],
-                      compiled: bool) -> jnp.ndarray:
-        prepared = self.prepare(queries)
+                      compiled: bool, graph_version: int = -1) -> jnp.ndarray:
+        prepared = self.prepare(queries, graph_version=graph_version)
         steps, ans = prepared.device_args()
         fn = (self.encode_fn_compiled(prepared) if compiled
               else self.encode_fn(prepared))

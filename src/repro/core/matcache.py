@@ -24,7 +24,12 @@ single version stamp:
   stamped exactly that version, and an insert of rows computed under a
   pinned version is silently DROPPED when the cache has moved on
   (``stale_drops``) — this closes the race where a batch encodes under old
-  params while an update lands concurrently.
+  params while an update lands concurrently;
+* GRAPH-version-pinned queries (DESIGN.md §LiveStore) additionally fold the
+  pinned ``graph_version`` into the row key itself
+  (``PooledExecutor.encode(graph_version=...)``): rows encoded against
+  different snapshots of the KG can never alias, even within one cache
+  version.
 
 Why cached rows are exempt from the compiler's grad-reassociation ulp
 caveat (DESIGN.md §Compiler): materialized rows are consumed on INFERENCE
@@ -94,8 +99,13 @@ class MaterializedSubqueryCache:
             return self._version
 
     def watch_kg(self, kg) -> None:
-        """Subscribe to KG writes: ``KnowledgeGraph.add_triples`` calls the
-        listener with reason ``"kg_write"``, bumping the version stamp."""
+        """Subscribe to KG writes: a committed ``KnowledgeGraph`` write
+        calls the listener (reason ``"kg_write"`` / ``"entity_add"``),
+        bumping the version stamp. A no-op write (empty input, all rows
+        already present) never fires, so warm rows survive it. The KG holds
+        the listener WEAKLY (``weakref.WeakMethod`` around this bound
+        method), so dropping the cache lets it be collected — no explicit
+        unsubscribe needed."""
         kg.add_invalidation_listener(self.bump_version)
 
     # --------------------------------------------------------------- access

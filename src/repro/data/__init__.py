@@ -1,7 +1,9 @@
 from repro.data.kg import (
     TABLE4,
+    KGSnapshot,
     KGStats,
     KnowledgeGraph,
+    SnapshotUnavailable,
     generate_synthetic_kg,
     load_dataset,
     split_kg,
@@ -9,8 +11,10 @@ from repro.data.kg import (
 
 __all__ = [
     "TABLE4",
+    "KGSnapshot",
     "KGStats",
     "KnowledgeGraph",
+    "SnapshotUnavailable",
     "generate_synthetic_kg",
     "load_dataset",
     "split_kg",

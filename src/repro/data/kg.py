@@ -7,12 +7,33 @@ represented two ways:
   * ``reduced``— small synthetic graphs with the same family (power-law
                  degrees, same relation/entity ratio) for CPU tests and
                  benchmarks.
+
+Live-write layer (DESIGN.md §LiveStore): the store is append-only but no
+longer read-only — ``add_triples``/``add_entities`` mutate it online while
+queries keep running on other threads. The concurrency contract is
+snapshot-based:
+
+  * every write builds the new CSR ASIDE and publishes it as ONE reference
+    assignment of an immutable ``_Adjacency`` tuple, so a lock-free reader
+    (serving batcher, sampler workers) always sees a matched
+    (triples, hr, tails) — never new ``hr`` paired with old ``tails``;
+  * every committed write bumps the monotonic ``graph_version`` and retains
+    an immutable ``KGSnapshot`` of the pre-existing adjacency, so queries
+    can PIN a version and replay bit-identically against the graph state
+    they were admitted under (the serving engine keys its caches on it);
+  * a write that changes nothing (empty input, all rows already present) is
+    a true no-op: no rebuild, no version bump, no listener fire — warm
+    materialized caches survive it;
+  * invalidation listeners are held by WEAKREF (the ``obs/registry.py``
+    idiom), so a discarded ``MaterializedSubqueryCache`` is collected and
+    its dead listener pruned on the next write.
 """
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from functools import cached_property
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, NamedTuple, Tuple
 
 import numpy as np
 
@@ -46,19 +67,124 @@ TABLE4: Dict[str, KGStats] = {
 }
 
 
-class KnowledgeGraph:
+class SnapshotUnavailable(KeyError):
+    """A pinned ``graph_version`` is no longer retained (or never existed)."""
+
+
+class _Adjacency(NamedTuple):
+    """One immutable CSR build. Readers grab the WHOLE tuple in a single
+    reference read, so the three arrays can never be observed torn."""
+
+    triples: np.ndarray   # [n, 3] int64, lexsorted by (h, r, t), deduped
+    hr: np.ndarray        # triples[:, 0] * R + triples[:, 1] (sorted)
+    tails: np.ndarray     # contiguous triples[:, 2] (sorted within hr spans)
+
+
+def _build_adjacency(triples: np.ndarray, n_relations: int) -> _Adjacency:
+    """Dedup + sort by (h, r, t) and index by (h, r).
+
+    Ordering/dedup uses ``np.lexsort`` over the COLUMNS — the composite key
+    ``(h*R + r)*E + t`` silently overflows int64 at ATLAS-Wiki-Triple-4M
+    scale (max key ≈ 8.3e18, within 10% of INT64_MAX; any larger graph
+    wraps, corrupting dedup and the CSR sort order). The 2-term ``h*R + r``
+    index below stays safe to E·R ≈ 9.2e18 — ~4.5e6x the paper's largest
+    graph — and is asserted anyway.
+    """
+    tri = np.asarray(triples, dtype=np.int64)
+    assert tri.ndim == 2 and tri.shape[1] == 3
+    order = np.lexsort((tri[:, 2], tri[:, 1], tri[:, 0]))
+    tri = tri[order]
+    if len(tri):
+        keep = np.concatenate([[True], np.any(tri[1:] != tri[:-1], axis=1)])
+        tri = tri[keep]
+        assert tri[:, 0].max() <= (np.iinfo(np.int64).max - n_relations) // max(n_relations, 1)
+    tri = np.ascontiguousarray(tri)
+    hr = tri[:, 0] * n_relations + tri[:, 1]
+    return _Adjacency(tri, hr, np.ascontiguousarray(tri[:, 2]))
+
+
+class _AdjacencyReader:
+    """Lock-free read API shared by the live graph and its snapshots. Every
+    method reads ``self._adj`` exactly ONCE, so concurrent writes (which
+    swap the whole tuple) can never tear a read."""
+
+    _adj: _Adjacency
+    n_relations: int
+
+    @property
+    def triples(self) -> np.ndarray:
+        return self._adj.triples
+
+    def __len__(self) -> int:
+        return self._adj.triples.shape[0]
+
+    def neighbors(self, h: int, r: int) -> np.ndarray:
+        """All tails t with (h, r, t) in the graph."""
+        adj = self._adj
+        hr = h * self.n_relations + r
+        lo = np.searchsorted(adj.hr, hr, side="left")
+        hi = np.searchsorted(adj.hr, hr, side="right")
+        return adj.tails[lo:hi]
+
+    def neighbors_of_set(self, heads: np.ndarray, r: int) -> np.ndarray:
+        """Union of tails over a set of heads for one relation (Project op)."""
+        if len(heads) == 0:
+            return np.empty((0,), dtype=np.int64)
+        adj = self._adj
+        hr = np.asarray(heads, dtype=np.int64) * self.n_relations + r
+        lo = np.searchsorted(adj.hr, hr, side="left")
+        hi = np.searchsorted(adj.hr, hr, side="right")
+        parts = [adj.tails[a:b] for a, b in zip(lo, hi) if b > a]
+        if not parts:
+            return np.empty((0,), dtype=np.int64)
+        return np.unique(np.concatenate(parts))
+
+    def contains(self, rows: np.ndarray) -> np.ndarray:
+        """Boolean membership per (h, r, t) row. Within one (h, r) span the
+        tails are sorted (triples are lexsorted), so each row is two binary
+        searches on ``hr`` plus one on its span."""
+        rows = np.asarray(rows, dtype=np.int64).reshape(-1, 3)
+        adj = self._adj
+        hr = rows[:, 0] * self.n_relations + rows[:, 1]
+        lo = np.searchsorted(adj.hr, hr, side="left")
+        hi = np.searchsorted(adj.hr, hr, side="right")
+        out = np.zeros(len(rows), dtype=bool)
+        for i in np.nonzero(hi > lo)[0]:
+            span = adj.tails[lo[i]:hi[i]]
+            j = np.searchsorted(span, rows[i, 2])
+            out[i] = j < len(span) and span[j] == rows[i, 2]
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class KGSnapshot(_AdjacencyReader):
+    """An immutable view of the graph at one ``graph_version``. Shares the
+    underlying (immutable) adjacency arrays with the live graph — taking a
+    snapshot is O(1) — and never changes after creation, so a query pinned
+    to it replays bit-identically regardless of later writes."""
+
+    name: str
+    n_entities: int
+    n_relations: int
+    graph_version: int
+    _adj: _Adjacency
+
+
+class KnowledgeGraph(_AdjacencyReader):
     """Append-only triple store with CSR adjacency for fast traversal.
 
     Adjacency is keyed by (head, relation) via a sorted (h * R + r) index so
     ``neighbors(h, r)`` is two binary searches — the access pattern the online
     sampler (App. F) hammers.
 
-    The store is immutable between writes; the one mutation is
-    ``add_triples`` (online KG growth), which rebuilds the CSR index, drops
-    every ``cached_property`` adjacency view and notifies invalidation
+    The store is immutable between writes; the mutations are ``add_triples``
+    / ``insert_triples`` (online KG growth) and ``add_entities``. A committed
+    write rebuilds the CSR aside and publishes it atomically, drops every
+    ``cached_property`` adjacency view, bumps ``graph_version``, retains a
+    ``KGSnapshot`` of the new state, and notifies (weakly-held) invalidation
     listeners — the hook materialized caches (``core/matcache.py``) use to
     bump their version stamp so rows encoded against the old graph are
-    never served.
+    never served at the new one.
     """
 
     # cached_property views derived from ``triples`` — every name here must
@@ -67,41 +193,92 @@ class KnowledgeGraph:
                      "relations_by_head", "incoming_by_tail",
                      "entities_with_incoming")
 
-    def __init__(self, n_entities: int, n_relations: int, triples: np.ndarray, name: str = "kg"):
+    def __init__(self, n_entities: int, n_relations: int, triples: np.ndarray,
+                 name: str = "kg", snapshot_retention: int = 8):
+        if snapshot_retention < 1:
+            raise ValueError("snapshot_retention must be >= 1")
         self.name = name
         self.n_entities = int(n_entities)
         self.n_relations = int(n_relations)
         self.version = 0
-        self._listeners: list = []
-        self._build(triples)
+        self.snapshot_retention = int(snapshot_retention)
+        self._listeners: List = []   # weakref.ref / weakref.WeakMethod
+        self._snapshots: Dict[int, KGSnapshot] = {}
+        self._adj = _build_adjacency(triples, self.n_relations)
+        self._retain_snapshot()
 
-    def _build(self, triples: np.ndarray) -> None:
-        assert triples.ndim == 2 and triples.shape[1] == 3
-        # Deduplicate and sort by (h, r, t).
-        key = (
-            triples[:, 0].astype(np.int64) * self.n_relations + triples[:, 1].astype(np.int64)
-        ) * self.n_entities + triples[:, 2].astype(np.int64)
-        order = np.argsort(key, kind="stable")
-        key = key[order]
-        keep = np.concatenate([[True], key[1:] != key[:-1]])
-        self.triples = triples[order][keep].astype(np.int64)
-        # CSR over (h, r).
-        self._hr = self.triples[:, 0] * self.n_relations + self.triples[:, 1]
-        self._tails = np.ascontiguousarray(self.triples[:, 2])
+    # ------------------------------------------------------------ versioning
+    @property
+    def graph_version(self) -> int:
+        """Monotonic write counter — the version caches and pinned queries
+        key on. Alias of ``version`` (the historical name)."""
+        return self.version
 
-    def __len__(self) -> int:
-        return self.triples.shape[0]
+    def snapshot(self) -> KGSnapshot:
+        """The immutable view of the CURRENT graph state."""
+        return self._snapshots[self.version]
+
+    def snapshot_at(self, version: int) -> KGSnapshot:
+        """The retained snapshot for ``version``; raises
+        ``SnapshotUnavailable`` once it has aged out of the retention window
+        (``snapshot_retention`` most-recent versions are kept)."""
+        snap = self._snapshots.get(version)
+        if snap is None:
+            raise SnapshotUnavailable(
+                f"graph version {version} is not retained "
+                f"(current {self.version}, retention {self.snapshot_retention})")
+        return snap
+
+    def retained_versions(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._snapshots))
+
+    def _retain_snapshot(self) -> None:
+        self._snapshots[self.version] = KGSnapshot(
+            self.name, self.n_entities, self.n_relations, self.version,
+            self._adj)
+        while len(self._snapshots) > self.snapshot_retention:
+            del self._snapshots[min(self._snapshots)]
 
     # ------------------------------------------------------------ KG writes
     def add_invalidation_listener(self, fn) -> None:
-        """Register ``fn(reason: str)`` to be called after every write —
-        e.g. ``MaterializedSubqueryCache.bump_version`` via ``watch_kg``."""
-        self._listeners.append(fn)
+        """Register ``fn(reason: str)`` to be called after every committed
+        write — e.g. ``MaterializedSubqueryCache.bump_version`` via
+        ``watch_kg``. Held WEAKLY (``WeakMethod`` for bound methods — the
+        ``obs/registry.py`` idiom): the KG must not keep a discarded cache
+        alive; dead refs are pruned on the next notify."""
+        ref = (weakref.WeakMethod(fn) if hasattr(fn, "__self__")
+               else weakref.ref(fn))
+        self._listeners.append(ref)
 
-    def add_triples(self, new_triples) -> "KnowledgeGraph":
-        """Online KG write: merge new (h, r, t) rows (duplicates of existing
-        triples are absorbed), rebuild the CSR index, invalidate every
-        cached adjacency view and notify listeners. Bumps ``version``."""
+    def live_listener_count(self) -> int:
+        """Number of listeners still alive (prunes dead refs)."""
+        self._listeners = [r for r in self._listeners if r() is not None]
+        return len(self._listeners)
+
+    def _notify(self, reason: str) -> None:
+        live, refs = [], []
+        for r in self._listeners:
+            fn = r()
+            if fn is not None:
+                live.append(fn)
+                refs.append(r)
+        self._listeners = refs
+        for fn in live:
+            fn(reason)
+
+    def _commit(self, reason: str) -> None:
+        for name in self._CACHED_VIEWS:
+            self.__dict__.pop(name, None)
+        self.version += 1
+        self._retain_snapshot()
+        self._notify(reason)
+
+    def insert_triples(self, new_triples) -> np.ndarray:
+        """Online KG write. Returns the rows actually inserted (deduped
+        against the store AND within the input) — empty when the write was a
+        no-op, in which case NOTHING happens: no CSR rebuild, no version
+        bump, no listener fire. A no-op write must not nuke warm
+        materialized caches."""
         new = np.asarray(new_triples, dtype=np.int64).reshape(-1, 3)
         if len(new):
             ents = new[:, [0, 2]]
@@ -109,32 +286,38 @@ class KnowledgeGraph:
                 raise ValueError("entity id out of range")
             if new[:, 1].min() < 0 or new[:, 1].max() >= self.n_relations:
                 raise ValueError("relation id out of range")
-        self._build(np.concatenate([self.triples, new], axis=0))
-        for name in self._CACHED_VIEWS:
-            self.__dict__.pop(name, None)
-        self.version += 1
-        for fn in list(self._listeners):
-            fn("kg_write")
+            new = new[~self.contains(new)]
+            if len(new) > 1:
+                new = np.unique(new, axis=0)
+        if len(new) == 0:
+            return new
+        # Build aside, publish with one reference assignment: lock-free
+        # readers on other threads (serving batcher, sampler workers) see
+        # either the whole old build or the whole new one, never a mix.
+        self._adj = _build_adjacency(
+            np.concatenate([self._adj.triples, new], axis=0),
+            self.n_relations)
+        self._commit("kg_write")
+        return new
+
+    def add_triples(self, new_triples) -> "KnowledgeGraph":
+        """``insert_triples`` with the chaining-friendly historical return."""
+        self.insert_triples(new_triples)
         return self
 
-    def neighbors(self, h: int, r: int) -> np.ndarray:
-        """All tails t with (h, r, t) in the graph."""
-        hr = h * self.n_relations + r
-        lo = np.searchsorted(self._hr, hr, side="left")
-        hi = np.searchsorted(self._hr, hr, side="right")
-        return self._tails[lo:hi]
-
-    def neighbors_of_set(self, heads: np.ndarray, r: int) -> np.ndarray:
-        """Union of tails over a set of heads for one relation (Project op)."""
-        if len(heads) == 0:
-            return np.empty((0,), dtype=np.int64)
-        hr = np.asarray(heads, dtype=np.int64) * self.n_relations + r
-        lo = np.searchsorted(self._hr, hr, side="left")
-        hi = np.searchsorted(self._hr, hr, side="right")
-        parts = [self._tails[a:b] for a, b in zip(lo, hi) if b > a]
-        if not parts:
-            return np.empty((0,), dtype=np.int64)
-        return np.unique(np.concatenate(parts))
+    def add_entities(self, n_new: int) -> range:
+        """Grow the entity id space by ``n_new`` (for live writes that
+        introduce unseen entities). The CSR is untouched — ``hr = h*R + r``
+        does not depend on E — but degree-shaped cached views drop, the
+        version bumps and listeners fire. Returns the new id range."""
+        if n_new < 0:
+            raise ValueError("n_new must be >= 0")
+        first = self.n_entities
+        if n_new == 0:
+            return range(first, first)
+        self.n_entities = first + int(n_new)
+        self._commit("entity_add")
+        return range(first, self.n_entities)
 
     @cached_property
     def out_degree(self) -> np.ndarray:

@@ -139,6 +139,16 @@ def main() -> None:
                     help="write a final registry snapshot (engine counters, "
                          "latency histogram, cache stats) as JSONL; "
                          "summarize with python -m repro.obs.report")
+    ap.add_argument("--max-staleness", type=int, default=0, metavar="V",
+                    help="staleness-bounded serving (DESIGN.md §LiveStore): "
+                         "attach the live graph and admit version-pinned "
+                         "requests up to V graph versions behind; out-of-"
+                         "bound pins are shed with StaleVersionError")
+    ap.add_argument("--live-writes", type=int, default=0, metavar="N",
+                    help="fire N live write bursts through LiveNGDB during "
+                         "the timed replay (graph commit + background "
+                         "incremental fine-tune) and report graph version / "
+                         "stale sheds / fine-tune count")
     ap.add_argument("--autotune-cache", default=None, metavar="PATH",
                     help="persisted kernel-tile autotune cache (DESIGN.md "
                          "§Autotuner): tuned configs load from PATH and the "
@@ -198,14 +208,21 @@ def main() -> None:
         mat_cache.watch_kg(kg)
         print(f"materialized cache: {args.materialize} rows "
               f"(invalidated on param update / KG write)")
+    live = args.live_writes > 0 or args.max_staleness > 0
+    if live and cache is not None:
+        ap.error("--live-writes/--max-staleness do not compose with "
+                 "--semantic-store (the device hot set is incompatible with "
+                 "version-pinned replay)")
     cfg = ServingConfig(max_batch=args.max_batch,
                         max_wait_ms=args.max_wait_ms,
-                        queue_depth=args.queue_depth, top_k=args.top_k)
+                        queue_depth=args.queue_depth, top_k=args.top_k,
+                        max_staleness_versions=args.max_staleness)
     engine = ServingEngine(model, params, executor=executor, cfg=cfg,
                            sem_cache=cache,
                            sem_rows_fn=store.read_rows if store else None,
                            ctx=ctx, mat_cache=mat_cache,
-                           latency_window=args.latency_window)
+                           latency_window=args.latency_window,
+                           kg=kg if live else None)
     workload = make_workload(kg, args.requests, seed=7)
 
     # Warmup pass compiles every signature the replay will form; the timed
@@ -221,12 +238,34 @@ def main() -> None:
     if args.trace:
         TRACER.enable()
         TRACER.set_lane("loadgen main")
+    writer, live_db = None, None
+    if args.live_writes > 0:
+        import threading
+
+        from repro.serving import LiveNGDB
+
+        live_db = LiveNGDB(model, kg, engine, finetune_steps=2)
+        wrng = np.random.default_rng(23)
+
+        def _write_bursts():
+            for _ in range(args.live_writes):
+                cand = np.stack([wrng.integers(0, kg.n_entities, 16),
+                                 wrng.integers(0, kg.n_relations, 16),
+                                 wrng.integers(0, kg.n_entities, 16)], axis=1)
+                live_db.write(cand[~kg.contains(cand)][:4])
+                time.sleep(0.01)
+
+        writer = threading.Thread(target=_write_bursts, name="live-writer")
+        writer.start()
     if args.qps > 0:
         report = run_open_loop(engine, workload, qps=args.qps)
     else:
         report = run_closed_loop(engine, workload,
                                  concurrency=args.concurrency,
                                  threads=args.client_threads)
+    if writer is not None:
+        writer.join()
+        live_db.flush()
     if args.trace:
         TRACER.write(args.trace)
         TRACER.disable()
@@ -252,6 +291,18 @@ def main() -> None:
         print(f"materialized rows: hit rate {mc['hit_rate']:.2%} "
               f"({mc['hits']} hits / {mc['misses']} misses), "
               f"{mc['live']} live, {mc['evictions']} evictions")
+    if live:
+        lag = st.get("version_lag_served", {})
+        print(f"live graph: version {st['graph_version']} "
+              f"(retained {st['retained_versions']}), "
+              f"{st['stale_sheds']} stale sheds, "
+              f"lag histogram {dict(sorted(lag.items()))}")
+    if live_db is not None:
+        n_fresh = sum(r.n_written for r in live_db.receipts)
+        print(f"live writes: {len(live_db.receipts)} bursts, "
+              f"{n_fresh} fresh triples, "
+              f"{live_db.finetunes_done} background fine-tunes")
+        live_db.close()
     print(f"first: {json.dumps(report.results[0])[:140]}...")
     if cache is not None:
         cs = cache.stats()

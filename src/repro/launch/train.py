@@ -117,6 +117,11 @@ def main() -> None:
                          "— the profile that splits the entity table 1/N "
                          "on a pure data mesh)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--live-writes", type=int, default=0, metavar="N",
+                    help="post-training live-write smoke (DESIGN.md "
+                         "§LiveStore): commit N fresh triple bursts into the "
+                         "trained KG and incrementally fine-tune the written "
+                         "neighborhoods from the trained params")
     ap.add_argument("--eval-queries", type=int, default=64)
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--trace", default=None, metavar="PATH",
@@ -266,6 +271,31 @@ def main() -> None:
               f"{cs['device_resident_sem_bytes']/1e6:.2f} MB device-resident, "
               f"prefetch overlap {cs['prefetch_overlap_frac']:.2%} "
               f"({cs['sync_stages']} synchronous mid-step reads)")
+
+    if args.live_writes > 0:
+        if cache is not None:
+            print("live-write smoke skipped: hot-set (sem_cache) params do "
+                  "not support live maintenance")
+        else:
+            from repro.training.loop import incremental_finetune
+
+            wrng = np.random.default_rng(29)
+            v0 = kg.graph_version
+            for i in range(args.live_writes):
+                cand = np.stack([wrng.integers(0, kg.n_entities, 16),
+                                 wrng.integers(0, kg.n_relations, 16),
+                                 wrng.integers(0, kg.n_entities, 16)], axis=1)
+                fresh = kg.insert_triples(cand[~kg.contains(cand)][:4])
+                if not len(fresh):
+                    continue
+                trainer.params, losses = incremental_finetune(
+                    model, trainer.params, fresh, lr=args.lr,
+                    seed=kg.graph_version, executor=trainer.executor)
+                print(f"live write {i}: v{kg.graph_version} "
+                      f"{len(fresh)} fresh triples, fine-tune loss "
+                      f"{losses[0]:.4f} -> {losses[-1]:.4f}")
+            print(f"live-write smoke: graph version {v0} -> "
+                  f"{kg.graph_version}, {len(kg)} triples")
 
     eval_qs = [b.query for b in OnlineSampler(kg, seed=123).sample_batch(args.eval_queries)]
     score_all_fn = None

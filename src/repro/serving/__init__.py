@@ -1,14 +1,16 @@
-"""Continuous-batching serving subsystem (DESIGN.md §Serving)."""
+"""Continuous-batching serving subsystem (DESIGN.md §Serving, §LiveStore)."""
 from repro.serving.engine import (BatchRecord, CachedScorer, ServingConfig,
-                                  ServingEngine, pad_to_bucket, scorer_for,
-                                  topk_desc)
+                                  ServingEngine, StaleVersionError,
+                                  pad_to_bucket, scorer_for, topk_desc)
+from repro.serving.live import LiveNGDB, WriteReceipt, grow_entity_rows
 from repro.serving.loadgen import (LoadReport, check_against_offline,
                                    latency_summary, make_workload,
                                    run_closed_loop, run_open_loop)
 
 __all__ = [
     "BatchRecord", "CachedScorer", "ServingConfig", "ServingEngine",
-    "pad_to_bucket", "scorer_for", "topk_desc",
+    "StaleVersionError", "pad_to_bucket", "scorer_for", "topk_desc",
+    "LiveNGDB", "WriteReceipt", "grow_entity_rows",
     "LoadReport", "check_against_offline", "latency_summary",
     "make_workload", "run_closed_loop", "run_open_loop",
 ]

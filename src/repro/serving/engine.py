@@ -69,6 +69,24 @@ from repro.obs.registry import get_registry
 from repro.obs.trace import TRACER
 
 
+class StaleVersionError(RuntimeError):
+    """A version-pinned request fell outside the engine's staleness bound.
+
+    Raised synchronously by ``submit`` when the pin is already out of bound
+    (or no longer retained) at admission, and set on the future when writes
+    land while the request is queued. Typed so clients can distinguish
+    load-shedding from real failures and re-submit unpinned (or re-pin to
+    ``engine.graph_version``)."""
+
+    def __init__(self, pinned: int, current: int, bound: int):
+        super().__init__(
+            f"graph version {pinned} is stale: current {current}, "
+            f"max_staleness_versions {bound}")
+        self.pinned = pinned
+        self.current = current
+        self.bound = bound
+
+
 def topk_desc(scores: np.ndarray, k: int) -> np.ndarray:
     """Indices of the k largest entries per row, descending — argpartition
     (linear in E) followed by an O(k log k) sort of just the survivors."""
@@ -156,6 +174,13 @@ class ServingConfig:
     bucket: bool = True        # signature-bucketed (pow2) batch padding
     record_batches: bool = False  # keep a log of (padded batch, results)
     latency_window: int = 8192    # completed-request latencies retained
+    # Staleness-bounded serving (DESIGN.md §LiveStore; needs ``kg=``): a
+    # version-pinned request is served from its pinned snapshot's params as
+    # long as the live graph is at most this many versions ahead; beyond
+    # the bound it is SHED with a typed StaleVersionError instead of being
+    # silently served stale rows. 0 = pinned requests only survive until
+    # the next write.
+    max_staleness_versions: int = 0
 
 
 @dataclasses.dataclass
@@ -168,6 +193,10 @@ class _Request:
     # tracing is off. Coalesced duplicates keep DISTINCT ids (each opened at
     # its own submit) while sharing one batch/encode/score span.
     trace_id: int = 0
+    # Pinned graph version (None = serve at whatever version is current at
+    # execute time). Pinned requests are grouped per version by the batcher
+    # and served from that version's retained params snapshot.
+    pin_version: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -200,7 +229,8 @@ class ServingEngine:
     def __init__(self, model, params, executor=None,
                  cfg: Optional[ServingConfig] = None, sem_cache=None,
                  sem_rows_fn=None, ctx=None, started: bool = True,
-                 mat_cache=None, latency_window: Optional[int] = None):
+                 mat_cache=None, latency_window: Optional[int] = None,
+                 kg=None):
         self.model = model
         self.params = params
         self.cfg = cfg or ServingConfig()
@@ -231,6 +261,27 @@ class ServingEngine:
                 and getattr(self.executor, "mat_cache", None) is not None):
             raise ValueError(
                 "pass mat_cache to the engine OR the executor, not both")
+        # Live-graph attachment (DESIGN.md §LiveStore): with ``kg`` set the
+        # engine tracks the graph's monotonic ``graph_version``, retains the
+        # params active at each recent version, and enforces the
+        # ``max_staleness_versions`` admission bound for pinned requests.
+        # The write listener is held WEAKLY by the KG, so a discarded engine
+        # is collected. Out-of-core sem staging mutates a device hot set
+        # shared across params snapshots, which version-pinned replay cannot
+        # coexist with — explicitly unsupported rather than silently wrong.
+        if kg is not None and sem_cache is not None:
+            raise ValueError(
+                "staleness-bounded serving (kg=...) does not support the "
+                "out-of-core sem_cache hot set yet — pass one or the other")
+        if self.cfg.max_staleness_versions < 0:
+            raise ValueError("max_staleness_versions must be >= 0")
+        self.kg = kg
+        self._graph_version = kg.graph_version if kg is not None else -1
+        self._version_retention = max(self.cfg.max_staleness_versions + 1, 4)
+        self._version_params: Dict[int, object] = (
+            {self._graph_version: params} if kg is not None else {})
+        if kg is not None:
+            kg.add_invalidation_listener(self._on_kg_write)
         self._scorer = scorer_for(model, ctx)
         self._scorer_traces0 = self._scorer.traces
         self._sharing0 = dict(self.executor.sharing_stats())
@@ -256,6 +307,12 @@ class ServingEngine:
                          for k in ("size", "age", "drain")}
         self._queue_depth = self._metrics.gauge("queue_depth")
         self._occupancy = self._metrics.gauge("batch_occupancy")
+        # §LiveStore counters: requests shed for staleness (typed error, NOT
+        # failures) and per-version-lag served counts (lag 0 = current).
+        self._stale_sheds = self._metrics.counter("stale_sheds")
+        self._version_served: Dict[int, object] = {}
+        self._graph_version_gauge = self._metrics.gauge("graph_version")
+        self._graph_version_gauge.set(self._graph_version)
         # After a registry-wide reset() the derived deltas (scorer traces,
         # sharing) must re-baseline or they would go negative; the hook is
         # held weakly, so a collected engine takes it along.
@@ -274,6 +331,31 @@ class ServingEngine:
             for k in list(self._flushes):
                 if k not in ("size", "age", "drain"):
                     del self._flushes[k]
+            self._version_served = {}
+
+    def _on_kg_write(self, reason: str) -> None:
+        """KG write listener (weakly held by the graph): advance the tracked
+        graph version and retain the CURRENT params under the new version —
+        until incremental maintenance publishes fine-tuned params via
+        ``update_params``, the new version serves with the old weights (the
+        staleness bound is about ROW consistency, which the version-keyed
+        caches own). Old versions age out of retention; a request pinned to
+        an evicted version is shed."""
+        with self._lock:
+            if self.kg is None:
+                return
+            self._graph_version = self.kg.graph_version
+            self._version_params[self._graph_version] = self.params
+            while len(self._version_params) > self._version_retention:
+                del self._version_params[min(self._version_params)]
+        self._graph_version_gauge.set(self._graph_version)
+
+    @property
+    def graph_version(self) -> int:
+        """The newest graph version this engine has observed (-1 when no
+        ``kg`` is attached)."""
+        with self._lock:
+            return self._graph_version
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
@@ -325,14 +407,39 @@ class ServingEngine:
 
     # ------------------------------------------------------------ admission
     def submit(self, query: QueryInstance, top_k: Optional[int] = None,
-               timeout: Optional[float] = None) -> Future:
+               timeout: Optional[float] = None,
+               pin_version: Optional[int] = None) -> Future:
         """Admit one request. Blocks when the admission queue is full
         (bounded-memory backpressure); with ``timeout`` raises ``queue.Full``
         instead. The returned future resolves to the same result dict
-        ``serve_batch`` produces, plus ``latency_ms``/``batch_size``."""
+        ``serve_batch`` produces, plus ``latency_ms``/``batch_size``.
+
+        ``pin_version`` (needs ``kg=`` at construction) pins the request to
+        one graph version: it is served from that version's retained params
+        with version-keyed plan/materialized rows — bit-identical replay
+        against the pinned snapshot — or shed with ``StaleVersionError``
+        when the live graph has moved more than
+        ``cfg.max_staleness_versions`` ahead (checked both here at
+        admission and again at execute time, since writes can land while
+        the request queues)."""
         k = self.cfg.top_k if top_k is None else top_k
         if k < 1:
             raise ValueError(f"top_k must be >= 1, got {k}")
+        if pin_version is not None:
+            if self.kg is None:
+                raise ValueError(
+                    "pin_version needs a live graph: construct the engine "
+                    "with kg=...")
+            with self._lock:
+                cur = self._graph_version
+                if pin_version < 0 or pin_version > cur:
+                    raise ValueError(
+                        f"unknown graph version {pin_version} (current {cur})")
+                if (cur - pin_version > self.cfg.max_staleness_versions
+                        or pin_version not in self._version_params):
+                    self._stale_sheds += 1
+                    raise StaleVersionError(pin_version, cur,
+                                            self.cfg.max_staleness_versions)
         with self._lock:
             if self._closed:
                 raise RuntimeError("serving engine is closed")
@@ -342,7 +449,8 @@ class ServingEngine:
             trace_id = TRACER.next_id()
             TRACER.async_begin("request", trace_id, pattern=query.pattern,
                                top_k=k)
-        r = _Request(query, k, Future(), time.perf_counter(), trace_id)
+        r = _Request(query, k, Future(), time.perf_counter(), trace_id,
+                     pin_version)
         try:
             self._q.put(r, timeout=timeout)
         except queue.Full:
@@ -407,6 +515,51 @@ class ServingEngine:
             self._execute(batch, flush)
 
     def _execute(self, batch: List[_Request], flush: str) -> None:
+        batch = self._shed_stale(batch)
+        if not batch:
+            return
+        # Pinned requests are served per pinned version (one params snapshot
+        # + one cache keyspace per micro-batch); a mixed flush splits into
+        # one group per distinct pin. Unpinned requests (pin None) ride the
+        # current-version group.
+        groups: Dict[Optional[int], List[_Request]] = {}
+        for r in batch:
+            groups.setdefault(r.pin_version, []).append(r)
+        if len(groups) > 1:
+            for g in groups.values():
+                self._execute_group(g, flush)
+            return
+        self._execute_group(batch, flush)
+
+    def _shed_stale(self, batch: List[_Request]) -> List[_Request]:
+        """Execute-time staleness re-check: writes that landed while a
+        pinned request queued can push it out of bound. Shed requests fail
+        with the typed error and count as ``stale_sheds`` — never as
+        ``failures``, and never through the poison-isolation retry path
+        (a shed is deterministic, a solo retry would just shed again)."""
+        if self.kg is None:
+            return batch
+        with self._lock:
+            cur = self._graph_version
+            bound = self.cfg.max_staleness_versions
+            keep: List[_Request] = []
+            shed: List[_Request] = []
+            for r in batch:
+                if (r.pin_version is not None
+                        and (cur - r.pin_version > bound
+                             or r.pin_version not in self._version_params)):
+                    shed.append(r)
+                else:
+                    keep.append(r)
+            self._stale_sheds += len(shed)
+            self._completed += len(shed)
+        for r in shed:
+            if r.trace_id:
+                TRACER.async_end("request", r.trace_id, shed=True)
+            r.future.set_exception(StaleVersionError(r.pin_version, cur, bound))
+        return keep
+
+    def _execute_group(self, batch: List[_Request], flush: str) -> None:
         # Exception, not BaseException: SystemExit/KeyboardInterrupt take
         # the batcher down rather than being swallowed into futures. Within
         # Exception, only recoverable per-request errors (e.g. malformed
@@ -418,6 +571,18 @@ class ServingEngine:
                              trace_ids=[r.trace_id for r in batch]):
                 results = self._serve(batch, flush)
         except Exception as e:
+            if isinstance(e, StaleVersionError):
+                # Deterministic shed (pin evicted mid-batch by a concurrent
+                # write): typed error, stale_sheds accounting, and NO solo
+                # retry — a retry would just shed again.
+                for r in batch:
+                    if r.trace_id:
+                        TRACER.async_end("request", r.trace_id, shed=True)
+                    r.future.set_exception(e)
+                with self._lock:
+                    self._stale_sheds += len(batch)
+                    self._completed += len(batch)
+                return
             if len(batch) > 1 and not isinstance(e, MemoryError):
                 # Isolate the poison request: one malformed query must not
                 # fail its co-batched neighbors. Solo retries carry their own
@@ -453,19 +618,25 @@ class ServingEngine:
             r.future.set_result(res)
 
     def update_params(self, params) -> None:
-        """Hot-swap the serving params (e.g. after an online training step).
-        The swap and the materialized-cache invalidation happen under ONE
-        lock acquisition, so no batch observes new params with old rows: a
-        batch that snapshotted before the swap keeps serving (old params,
-        old-version rows) consistently, and its late inserts are dropped by
-        the version check."""
+        """Hot-swap the serving params (e.g. after an online training step
+        or incremental fine-tune). The swap and the materialized-cache
+        invalidation happen under ONE lock acquisition, so no batch observes
+        new params with old rows: a batch that snapshotted before the swap
+        keeps serving (old params, old-version rows) consistently, and its
+        late inserts are dropped by the version check. With a live graph
+        attached, the new params also become the CURRENT graph version's
+        retained snapshot — requests pinned to older versions keep their
+        original params."""
         with self._lock:
             self.params = params
+            if self.kg is not None:
+                self._version_params[self._graph_version] = params
             if self.mat_cache is not None:
                 self.mat_cache.bump_version("param_update")
 
     def _states_for(self, params, uniq: List[QueryInstance],
-                    padded: List[QueryInstance], n_real: int, mat_ver: int):
+                    padded: List[QueryInstance], n_real: int, mat_ver: int,
+                    gv: int = -1):
         """Encoded states for the padded unique composition, serving rows
         out of the materialized cache where possible. The assembled array is
         bitwise what ``executor.encode(params, padded)`` would return —
@@ -473,10 +644,17 @@ class ServingEngine:
         exactly, cached rows were such subset rows at the same version, and
         pad rows repeat the last unique row just as ``pad_to_bucket``'s
         repeated query would — so scoring and offline-oracle replay are
-        untouched by the cache."""
+        untouched by the cache.
+
+        ``gv`` (the batch's graph version; -1 = no live graph) keys both the
+        plan cache and the materialized rows: rows encoded against different
+        graph snapshots can never alias, even though all pins share one
+        cache ``mat_ver`` stamp (the stamp owns PARAM freshness, the key
+        owns graph state)."""
         if self.mat_cache is None:
-            return self.executor.encode(params, padded, compiled=True)
-        keys = [q.key() for q in uniq]
+            return self.executor.encode(params, padded, compiled=True,
+                                        graph_version=gv)
+        keys = [q.key() if gv < 0 else q.key() + (gv,) for q in uniq]
         cached = self.mat_cache.lookup(keys, version=mat_ver)
         miss = [j for j in range(len(uniq)) if j not in cached]
         fresh = None
@@ -485,7 +663,8 @@ class ServingEngine:
             if self.cfg.bucket:
                 sub, sub_n = pad_to_bucket(sub)
             fresh = np.asarray(
-                self.executor.encode(params, sub, compiled=True))[: len(miss)]
+                self.executor.encode(params, sub, compiled=True,
+                                     graph_version=gv))[: len(miss)]
             self.mat_cache.insert([keys[j] for j in miss], fresh,
                                   version=mat_ver)
         dim = (fresh.shape[1] if fresh is not None
@@ -520,15 +699,30 @@ class ServingEngine:
             padded, n_real = pad_to_bucket(uniq)
         else:
             padded, n_real = list(uniq), len(uniq)
-        # Snapshot (params, cache version) together under the lock:
-        # ``update_params`` swaps and bumps under the same lock, so a batch
-        # can never pair new params with rows materialized under old ones
-        # (or vice versa) — the staleness contract tests/test_plan_cache.py
-        # pins.
+        # Snapshot (params, cache version, graph version) together under the
+        # lock: ``update_params`` swaps and bumps under the same lock, so a
+        # batch can never pair new params with rows materialized under old
+        # ones (or vice versa) — the staleness contract
+        # tests/test_plan_cache.py pins. A pinned batch (all requests share
+        # one pin after grouping) serves from the pinned version's RETAINED
+        # params instead of the live handle; ``_shed_stale`` already
+        # guaranteed the pin is in bound and retained.
+        pin = batch[0].pin_version
         with self._lock:
-            params = self.params
+            if pin is not None:
+                params = self._version_params.get(pin)
+                if params is None:
+                    # A write on another thread evicted the pin between the
+                    # shed check and this snapshot — shed, don't fail.
+                    raise StaleVersionError(pin, self._graph_version,
+                                            self.cfg.max_staleness_versions)
+                gv = pin
+            else:
+                params = self.params
+                gv = self._graph_version
             mat_ver = (self.mat_cache.version
                        if self.mat_cache is not None else -1)
+            lag = self._graph_version - gv if self.kg is not None else 0
         if self.sem_cache is not None:
             # Staging folds into the batcher thread: the plan's store read +
             # device put and the apply scatter happen here, once per
@@ -542,8 +736,9 @@ class ServingEngine:
             if stage is not None:
                 params = self.sem_cache.apply_to(params, stage)
                 self.params = params
-        with TRACER.span("encode", n=len(padded)):
-            states = self._states_for(params, uniq, padded, n_real, mat_ver)
+        with TRACER.span("encode", n=len(padded), graph_version=gv):
+            states = self._states_for(params, uniq, padded, n_real, mat_ver,
+                                      gv)
         with TRACER.span("score", n=len(padded)):
             if self.sem_cache is not None:
                 scores = self.model.score_all_chunked(params, states,
@@ -600,6 +795,15 @@ class ServingEngine:
                 fc = self._flushes[flush] = self._metrics.counter(
                     "flushes", kind=flush)
             fc.inc()
+            if self.kg is not None:
+                # Per-version-lag served accounting (lag 0 = current graph
+                # version): the §LiveStore observability hook for "how stale
+                # is the traffic we actually serve".
+                vc = self._version_served.get(lag)
+                if vc is None:
+                    vc = self._version_served[lag] = self._metrics.counter(
+                        "version_lag_served", lag=str(lag))
+                vc += len(batch)
             if self.cfg.record_batches:
                 # The log holds the UNIQUE composition as executed (one
                 # result per computed row), so offline-oracle replay compares
@@ -636,12 +840,14 @@ class ServingEngine:
             self._latency.reset()
             self._metrics.reset(only=[
                 self._batches, self._batch_rows, self._padded_rows,
-                self._coalesced, self._failures])
+                self._coalesced, self._failures, self._stale_sheds])
             for k in list(self._flushes):
                 if k in ("size", "age", "drain"):
                     self._flushes[k].reset()
                 else:
                     del self._flushes[k]
+            for c in self._version_served.values():
+                c.reset()
             if clear_log:
                 self.batch_log = []
 
@@ -663,6 +869,12 @@ class ServingEngine:
                 # computation (same QueryInstance.key())
                 "coalesced": int(self._coalesced),
             }
+            if self.kg is not None:
+                out["graph_version"] = self._graph_version
+                out["retained_versions"] = sorted(self._version_params)
+                out["stale_sheds"] = int(self._stale_sheds)
+                out["version_lag_served"] = {
+                    lag: int(c) for lag, c in self._version_served.items()}
         if len(lat):
             from repro.serving.loadgen import latency_summary
 

@@ -72,6 +72,73 @@ class TrainConfig:
     #                                 fraction; None = disabled, zero cost)
 
 
+def incremental_finetune(model, params, triples, *, steps: int = 4,
+                         lr: float = 1e-3, n_negatives: int = 8,
+                         seed: int = 0, b_max: int = 64, executor=None):
+    """Incremental embedding maintenance for a live KG write (DESIGN.md
+    §LiveStore): a few Adam steps of 1p link-prediction loss on exactly the
+    written triples, touching the written neighborhood instead of
+    retraining from scratch. Returns ``(new_params, losses)``.
+
+    Deterministic by construction — a pure function of (params, triples,
+    hyperparams, seed): negatives come from a seeded generator, the batch
+    is canonicalized by the same plan compiler as training, and the jitted
+    step does NOT donate its inputs — the caller's params are typically the
+    serving engine's LIVE weights, concurrently read by the batcher thread,
+    so they must survive this call unchanged. The background maintenance
+    thread and a synchronous oracle rerun therefore produce bitwise-
+    identical params, which ``benchmarks/live.py`` gates."""
+    triples = np.asarray(triples, dtype=np.int64).reshape(-1, 3)
+    if len(triples) == 0:
+        return params, []
+    from repro.core.patterns import QueryInstance
+
+    executor = executor or PooledExecutor(model, b_max=b_max)
+    queries = [QueryInstance("1p", np.array([h]), np.array([r]))
+               for h, r, _ in triples]
+    pos = np.ascontiguousarray(triples[:, 2])
+    rng = np.random.default_rng(seed)
+    n_ent = model.n_entities
+    neg = rng.integers(0, n_ent, size=(len(pos), n_negatives))
+    clash = neg == pos[:, None]
+    while clash.any():
+        neg[clash] = rng.integers(0, n_ent, size=int(clash.sum()))
+        clash = neg == pos[:, None]
+    prepared = executor.prepare(queries)
+    pos = pos[prepared.order]
+    neg = neg[prepared.order]
+    step_arrays, ans = prepared.device_args()
+    encode = executor.encode_fn(prepared)
+    adam_cfg = AdamConfig(lr=lr)
+    frozen_names = set(model.frozen_param_names())
+
+    def step_fn(params, opt_state, steps_in, ans_slots, pos_in, neg_in):
+        trainable = {k: v for k, v in params.items()
+                     if k not in frozen_names}
+        frozen = {k: v for k, v in params.items() if k in frozen_names}
+
+        def loss_fn(t):
+            p = {**t, **frozen}
+            q = encode(p, steps_in, ans_slots)
+            return negative_sampling_loss(model, p, q, pos_in, neg_in)
+
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+        grads = {**grads,
+                 **{k: jnp.zeros((1,), jnp.float32) for k in frozen}}
+        params, opt_state = adam_update(grads, opt_state, params, adam_cfg)
+        return params, opt_state, loss
+
+    fn = jax.jit(step_fn)
+    opt_state = adam_init(params, adam_cfg)
+    losses: List[float] = []
+    pos_j, neg_j = jnp.asarray(pos), jnp.asarray(neg)
+    for _ in range(steps):
+        params, opt_state, loss = fn(params, opt_state, step_arrays, ans,
+                                     pos_j, neg_j)
+        losses.append(float(loss))
+    return params, losses
+
+
 class NGDBTrainer:
     def __init__(self, model, kg, cfg: TrainConfig, semantic_table=None,
                  semantic_cache=None, ctx=None):

@@ -213,6 +213,73 @@ def test_kg_write_invalidates_adjacency_views():
     assert kg.version == 1              # failed writes don't bump
 
 
+@pytest.mark.parametrize("name", model_names())
+def test_pinned_graph_versions_replay_snapshot_oracle(name):
+    """§LiveStore staleness property test: under a seeded interleaving of
+    {pinned serve, unpinned serve, KG write, param update} against a LIVE
+    engine (kg= attached, mat cache keyed by graph version), every served
+    row equals the snapshot-pinned oracle — ``serve_batch`` run cache-free
+    with the params that were live when the pinned version was admitted —
+    for every model family. One row computed from the wrong params/version
+    pairing breaks the equality."""
+    from repro.launch.serve import serve_batch
+
+    kg = generate_synthetic_kg(80, 6, 600, seed=3)
+    model, params = _model_params(kg, name=name)
+    mat = MaterializedSubqueryCache(32)
+    mat.watch_kg(kg)
+    bound = 3
+    cfg = ServingConfig(max_batch=8, max_wait_ms=2.0, top_k=5,
+                        max_staleness_versions=bound)
+    pool = [s.query for s in OnlineSampler(kg, seed=11).sample_batch(30)]
+    oracle_ex = PooledExecutor(model, b_max=32)     # cache-free fresh compute
+    strip = lambda r: {k: v for k, v in r.items()   # noqa: E731
+                       if k not in ("latency_ms", "batch_size")}
+    params_at = {0: params}     # our own mirror of the engine's retention map
+    cur = params
+    rng = np.random.default_rng(13)
+    ops = ("pinned", "pinned", "unpinned", "kg_write", "param_update")
+    lagged = 0
+    with ServingEngine(model, params, cfg=cfg, kg=kg, mat_cache=mat,
+                       executor=PooledExecutor(model, b_max=32)) as eng:
+        for step in range(16):
+            op = "pinned" if step == 0 else ops[int(rng.integers(len(ops)))]
+            if op == "kg_write":
+                kg.add_triples([[int(rng.integers(80)), int(rng.integers(6)),
+                                 int(rng.integers(80))]])
+                # the engine's write listener registers the live params
+                # under the new version; mirror that bookkeeping
+                params_at[kg.graph_version] = cur
+            elif op == "param_update":
+                cur = {k: (v * np.float32(1.001)
+                           if np.issubdtype(np.asarray(v).dtype, np.floating)
+                           else v)
+                       for k, v in cur.items()}
+                eng.update_params(cur)
+                params_at[kg.graph_version] = cur
+            else:
+                qs = [pool[i] for i in rng.integers(len(pool), size=4)]
+                pin = None
+                if op == "pinned":
+                    # half the pins take the OLDEST admissible version so
+                    # lagged replay is actually exercised, not just lag 0
+                    lo = max(0, kg.graph_version - bound)
+                    pin = (lo if rng.random() < 0.5
+                           else int(rng.integers(lo, kg.graph_version + 1)))
+                    lagged += int(pin < kg.graph_version)
+                futs = [eng.submit(q, pin_version=pin) for q in qs]
+                got = [strip(f.result(timeout=120)) for f in futs]
+                oracle_params = params_at[pin if pin is not None
+                                          else kg.graph_version]
+                want, _ = serve_batch(model, oracle_params, oracle_ex, qs,
+                                      top_k=5)
+                assert got == [strip(w) for w in want]
+        st = eng.stats()
+    assert kg.graph_version > 0 and lagged > 0   # interleaving did exercise
+    assert st["failures"] == 0 and st["stale_sheds"] == 0
+    assert sum(st["version_lag_served"].values()) == st["completed"]
+
+
 def test_insert_at_pinned_version_drops_after_bump():
     """The encode-under-old-params race, distilled: a batch snapshots
     (params, version), an update lands, its insert must be dropped whole."""
