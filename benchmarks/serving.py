@@ -1,4 +1,5 @@
-"""§Serving load test: continuous-batching engine vs the offline baseline.
+"""§Serving load test: continuous-batching engine vs the offline baseline,
+plus the multi-replica serving-tier gates (DESIGN.md §ServingTier).
 
 Replays a deterministic mixed-pattern workload through the ``ServingEngine``
 and asserts the two serving invariants (DESIGN.md §Serving):
@@ -12,8 +13,21 @@ and asserts the two serving invariants (DESIGN.md §Serving):
   schedule/encode/scorer lookup hits (signature-bucketed padding keeps the
   jit signature set closed).
 
-Timed phases measure closed-loop throughput (max sustainable QPS) and
-open-loop latency (p50/p95/p99 under burst or ``--qps``-paced arrivals).
+The serving-tier section (``multi_replica`` in the summary; ``--no-tier``
+skips it) adds two phases over a routed :class:`ReplicaPool`:
+
+* **affinity replay** — a cyclic replay over more distinct queries than ONE
+  replica's materialized cache can hold. Rendezvous routing partitions the
+  topologies so every replica's share FITS its cache (steady-state mat hits,
+  zero retraces per replica), while a single replica with the SAME
+  per-replica budget thrashes its CLOCK cache on every cycle — the
+  aggregate-QPS >= 2.5x gate is cache affinity made visible, not thread
+  parallelism (the bench box serializes on one core either way).
+* **overload mix** — a paced high-priority tenant (gold) against a
+  low-priority flood (bronze): gold p99 must stay within 2x its unloaded
+  p99 while bronze's excess is shed with typed, counted, never-blocking
+  ``ShedError``s.
+
 The summary lands in ``BENCH_serving.json`` at the repo root (committed, so
 the serving perf trajectory accumulates across PRs); a violated invariant
 publishes ``ok: false`` BEFORE raising, so a stale green verdict can never
@@ -22,9 +36,12 @@ survive a crashed run.
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import os
 import sys
+import threading
+import time
 
 if __package__ in (None, ""):  # direct `python benchmarks/serving.py`
     _root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
@@ -38,9 +55,11 @@ from repro.core import PooledExecutor
 from repro.data import load_dataset
 from repro.launch.serve import serve_batch
 from repro.models import ModelConfig, make_model
-from repro.serving import (ServingConfig, ServingEngine,
+from repro.serving import (ReplicaPool, Router, RouterConfig, ServingConfig,
+                           ServingEngine, TenantLoad, TenantSpec,
                            check_against_offline, make_workload,
-                           run_closed_loop, run_open_loop)
+                           query_topology_key, rendezvous_rank,
+                           run_closed_loop, run_open_loop, run_tenant_mix)
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 _DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_serving.json")
@@ -61,7 +80,8 @@ def _check_bit_identity(engine, model_name, dim, kg, top_k, b_max):
 
 def run(requests: int = 192, max_batch: int = 16, dim: int = 32,
         model_name: str = "gqe", dataset: str = "FB15k", top_k: int = 10,
-        qps: float = 0.0, out_path: str = _DEFAULT_OUT) -> dict:
+        qps: float = 0.0, replicas: int = 4, tier: bool = True,
+        out_path: str = _DEFAULT_OUT) -> dict:
     summary = {"ok": False, "suite": "serving", "model": model_name,
                "dataset": dataset, "requests": 0, "failures": []}
 
@@ -73,6 +93,9 @@ def run(requests: int = 192, max_batch: int = 16, dim: int = 32,
     try:
         _run_inner(summary, requests, max_batch, dim, model_name, dataset,
                    top_k, qps)
+        if tier:
+            _run_tier(summary, max_batch, dim, model_name, dataset, top_k,
+                      replicas)
         summary["ok"] = not summary["failures"]
     except BaseException as e:
         # Publish the red verdict first: a crashed sweep must not leave a
@@ -154,12 +177,20 @@ def _run_inner(summary, requests, max_batch, dim, model_name, dataset,
          f"{closed_retraces + open_retraces} (warmup: {warm_compiles} "
          f"cold misses)")
 
+    # ``qps_offered`` is the rate the open-loop generator MEASURED over its
+    # submit phase (historically it echoed the --qps argument, so burst mode
+    # published 0.0 next to a 4000+ qps_open). Nonzero-gated.
+    if open_rep.offered_qps <= 0:
+        summary["failures"].append(
+            f"open-loop offered rate not recorded ({open_rep.offered_qps})")
+
     summary.update({
         "requests": requests,
         "max_batch": max_batch,
         "dim": dim,
         "top_k": top_k,
-        "qps_offered": qps,
+        "qps_offered": round(open_rep.offered_qps, 1),
+        "qps_paced": qps,
         "qps_closed": round(closed.qps, 1),
         "qps_open": round(open_rep.qps, 1),
         "latency_ms": {k: round(v, 3) for k, v in lat.items()},
@@ -177,6 +208,289 @@ def _run_inner(summary, requests, max_batch, dim, model_name, dataset,
         raise AssertionError("; ".join(summary["failures"]))
 
 
+_DEEP_PATTERNS = ("3p", "3i", "ip", "pi", "inp", "pin", "pni", "up", "3in")
+
+
+def _affinity_streams(kg, rids, max_batch, seed=13):
+    """Deterministic per-replica replay streams: unique deep-pattern queries
+    partitioned by the SAME rendezvous placement the router will use, each
+    stream trimmed to whole micro-batches so the lock-step closed loop below
+    replays identical compositions every cycle (the zero-retrace contract is
+    about replayed compositions). Deep (multi-hop/intersection) patterns
+    because that is the traffic the affinity claim is about: the deeper the
+    plan, the more encode work a materialized-row hit elides."""
+    raw = {q.key(): q for q in make_workload(kg, 16 * max_batch, seed=seed,
+                                             patterns=list(_DEEP_PATTERNS))}
+    streams = {rid: [] for rid in rids}
+    for q in raw.values():
+        streams[rendezvous_rank(query_topology_key(q), rids)[0]].append(q)
+    return {rid: qs[: len(qs) // max_batch * max_batch]
+            for rid, qs in streams.items() if len(qs) >= max_batch}
+
+
+def _cycle_blocks(streams, max_batch):
+    """One replay cycle as replica-homogeneous blocks of ``max_batch``: the
+    closed loop keeps exactly one block in flight, so each block IS one
+    micro-batch on its home replica — composition-deterministic across
+    cycles and across the single-replica baseline."""
+    blocks = []
+    for rid in sorted(streams):
+        qs = streams[rid]
+        blocks.extend(qs[i:i + max_batch]
+                      for i in range(0, len(qs), max_batch))
+    return blocks
+
+
+def _lane(router, blocks, timeout, errs):
+    """One client's lock-step replay: exactly one block in flight, so each
+    block IS one micro-batch on its home replica and compositions replay
+    identically every cycle."""
+    try:
+        for blk in blocks:
+            # Batched admission (one placement pass + one queue entry per
+            # home replica) for both configurations — the tier comparison
+            # measures serving cost, not per-call client overhead.
+            futures = router.submit_many(blk)
+            for f in futures:
+                f.result(timeout=timeout)
+    except BaseException as e:  # surfaced by _replay_lanes on the caller
+        errs.append(e)
+
+
+def _replay_lanes(router, lanes, timeout=120.0):
+    """Replay affinity lanes concurrently — one client thread per lane,
+    mirroring a deployment where each replica serves its own stream of
+    affine clients. Per-replica compositions stay deterministic (each lane
+    keeps one block in flight on its home replica); the lanes overlap only
+    where the engine releases the GIL (XLA compute), which is exactly the
+    concurrency a multi-replica tier buys on shared hardware. Returns
+    aggregate QPS over the slowest lane's wall clock."""
+    errs: list = []
+    t0 = time.perf_counter()
+    if len(lanes) == 1:
+        _lane(router, lanes[0], timeout, errs)
+    else:
+        threads = [threading.Thread(target=_lane, args=(router, bl, timeout,
+                                                        errs), daemon=True)
+                   for bl in lanes]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    n = sum(len(b) for bl in lanes for b in bl)
+    return n / max(wall, 1e-9)
+
+
+def _run_tier(summary, max_batch, dim, model_name, dataset, top_k,
+              replicas) -> None:
+    import dataclasses
+
+    kg, _, _ = load_dataset(dataset)
+    model = make_model(model_name, ModelConfig(dim=dim, gamma=6.0))
+    params = model.init_params(jax.random.PRNGKey(0), kg.n_entities,
+                               kg.n_relations)
+    tier = {"replicas": replicas}
+    summary["multi_replica"] = tier
+
+    # ---- affinity replay: aggregate QPS vs a single replica -------------
+    # Encode cost per miss batch is dominated by per-stage-group dispatch,
+    # i.e. it is nearly independent of the row count, while the hit path
+    # scales with rows — so SMALL blocks maximize the measured contrast
+    # between a mat-resident pool and a thrashing single replica. One block
+    # == one engine micro-batch keeps compositions replay-deterministic.
+    tier_batch = max_batch
+    rids = list(range(replicas))
+    streams = _affinity_streams(kg, rids, tier_batch)
+    shares = {rid: len(qs) for rid, qs in streams.items()}
+    total = sum(shares.values())
+    # Every replica's share fits its materialized cache; the UNION does not
+    # fit one replica's cache — that asymmetry is the whole experiment.
+    budget = max(shares.values()) + tier_batch
+    if total < budget + 2 * tier_batch:
+        summary["failures"].append(
+            f"affinity workload too small to demonstrate thrash "
+            f"(unique {total}, per-replica budget {budget})")
+        return
+    blocks = _cycle_blocks(streams, tier_batch)
+    cycles = 2
+    n_timed = len(blocks) * tier_batch * cycles
+    cfg = ServingConfig(max_batch=tier_batch, max_wait_ms=2000.0,
+                        queue_depth=256, top_k=top_k)
+    rcfg = RouterConfig(spill_width=0)  # pure affinity: deterministic homes
+
+    results = {}
+    for tag, n_reps in (("single", 1), ("pool", replicas)):
+        pool = ReplicaPool(model, params, n_replicas=n_reps, cfg=cfg,
+                           mat_budget_rows=budget, b_max=256)
+        router = Router(pool, cfg=dataclasses.replace(rcfg))
+        # One sequential client for BOTH configurations: every block is one
+        # micro-batch on its home replica, compositions replay identically
+        # every cycle, and the comparison isolates cache affinity (client
+        # threads per lane would measure GIL contention on this one-core
+        # box, not the tier).
+        lanes = [blocks]
+        _replay_lanes(router, lanes)                   # warm caches + jits
+        pool.reset_counters()
+        timed_lanes = [bl * cycles for bl in lanes]
+        # Best of two timed replays: OS scheduling jitter on a shared box
+        # only ever slows a run down, so the faster trial is the better
+        # estimate of each configuration's sustainable rate. Collect garbage
+        # before each trial — a gen2 GC pause landing on the batcher thread
+        # mid-replay is pure measurement noise.
+        gc.collect()
+        best_qps = _replay_lanes(router, timed_lanes)
+        gc.collect()
+        best_qps = max(best_qps, _replay_lanes(router, timed_lanes))
+        per = {}
+        for rid, r in pool.replicas().items():
+            st = r.stats()
+            per[rid] = {
+                "submitted": st["submitted"],
+                "batches": st["batches"],
+                "retraces": st["retraces"],
+                "mat_hit_rate": round(st["mat_cache"]["hit_rate"], 4),
+            }
+        results[tag] = {"qps": best_qps, "per_replica": per,
+                        "router": router.stats(), "pool": pool}
+        if tag == "single":
+            router.close()
+
+    qps_single = results["single"]["qps"]
+    qps_pool = results["pool"]["qps"]
+    speedup = qps_pool / max(qps_single, 1e-9)
+    tier.update({
+        "unique_queries": total,
+        "tier_batch": tier_batch,
+        "mat_budget_rows": budget,
+        "replay_requests": n_timed,
+        "qps_single": round(qps_single, 1),
+        "qps_pool": round(qps_pool, 1),
+        "speedup": round(speedup, 2),
+        "single_mat_hit_rate":
+            results["single"]["per_replica"][0]["mat_hit_rate"],
+        "per_replica": {str(rid): dict(st)
+                        for rid, st in results["pool"]["per_replica"].items()},
+        "spilled": results["pool"]["router"]["spilled"],
+    })
+    emit(f"serving/{dataset}/{model_name}/tier_qps_pool",
+         1e6 / max(qps_pool, 1e-9), f"qps={qps_pool:.0f}")
+    emit(f"serving/{dataset}/{model_name}/tier_speedup_x{replicas}",
+         speedup, f"{speedup:.2f}x vs single replica")
+    if speedup < 2.5:
+        summary["failures"].append(
+            f"affinity speedup {speedup:.2f}x < 2.5x at {replicas} replicas "
+            f"(single {qps_single:.0f} qps, pool {qps_pool:.0f} qps)")
+    for rid, st in results["pool"]["per_replica"].items():
+        if st["retraces"] != 0:
+            summary["failures"].append(
+                f"replica {rid}: {st['retraces']} steady-state retraces in "
+                f"the affinity replay")
+
+    # ---- overload mix: priority SLOs + typed shed -----------------------
+    pool = results["pool"]["pool"]
+    # Re-point the flush policy at latency-serving values for the paced
+    # phase (the affinity phase used a long age window for deterministic
+    # replay); queues are empty between phases, so this is safe.
+    for r in pool.replicas().values():
+        r.engine.cfg = dataclasses.replace(r.engine.cfg, max_wait_ms=2.0,
+                                           max_batch=max_batch)
+    router = Router(pool, tenants=[
+        TenantSpec("gold", "high"),
+        TenantSpec("bronze", "low"),
+    ], cfg=RouterConfig(spill_width=0, low_priority_depth=1))
+    # Warm the shared scorer for the small pow2 batch sizes paced arrivals
+    # form (the affinity phase only ever scored full batches; every overload
+    # query is mat-resident, so encode never runs and only score_all has
+    # unseen signatures).
+    import numpy as np
+
+    from repro.serving import scorer_for
+
+    any_rep = next(iter(pool.replicas().values()))
+    probe_q = next(iter(streams.values()))[0]
+    state_dim = np.asarray(
+        any_rep.executor.encode(params, [probe_q], compiled=True)).shape[1]
+    scorer = scorer_for(model)
+    b = 1
+    while b <= max_batch:
+        scorer(params, np.zeros((b, state_dim), dtype=np.float32))
+        b *= 2
+
+    gold_n, gold_qps = 12 * max_batch, 150.0
+    bronze_n, bronze_qps = 24 * max_batch, 1000.0
+    all_qs = [q for rid in sorted(streams) for q in streams[rid]]
+    gold_qs = (all_qs * ((gold_n // len(all_qs)) + 1))[:gold_n]
+    bronze_qs = (all_qs[::-1] * ((bronze_n // len(all_qs)) + 1))[:bronze_n]
+
+    # GC before each paced phase: a collection pause on a batcher thread
+    # stalls every queued request at once, which a p99-vs-p99 gate reads as
+    # an SLO breach when it is allocator noise from the phases before.
+    gc.collect()
+    unloaded = run_tenant_mix(router, [TenantLoad("gold", gold_qs, gold_qps)])
+    gc.collect()
+    mixed = run_tenant_mix(router, [
+        TenantLoad("gold", gold_qs, gold_qps),
+        TenantLoad("bronze", bronze_qs, bronze_qps),
+    ])
+    router.close()
+
+    g0, g1, b1 = unloaded["gold"], mixed["gold"], mixed["bronze"]
+    tier["tenants"] = {
+        "gold": {
+            "priority": "high",
+            "offered": g1.offered,
+            "completed": g1.completed,
+            "shed_rate": round(g1.shed / max(g1.offered, 1), 4),
+            "p50_ms": round(g1.latency_ms["p50"], 3),
+            "p99_ms": round(g1.latency_ms["p99"], 3),
+            "p99_unloaded_ms": round(g0.latency_ms["p99"], 3),
+        },
+        "bronze": {
+            "priority": "low",
+            "offered": b1.offered,
+            "completed": b1.completed,
+            "shed": b1.shed,
+            "shed_rate": round(b1.shed / max(b1.offered, 1), 4),
+            "failures": b1.failures,
+            "submit_p99_ms": round(b1.submit_ms["p99"], 3),
+            "submit_max_ms": round(b1.submit_ms["max"], 3),
+            "p50_ms": round(b1.latency_ms["p50"], 3),
+            "p99_ms": round(b1.latency_ms["p99"], 3),
+        },
+    }
+    emit(f"serving/{dataset}/{model_name}/tier_gold_p99",
+         g1.latency_ms["p99"] * 1e3, f"{g1.latency_ms['p99']:.1f} ms "
+         f"(unloaded {g0.latency_ms['p99']:.1f} ms)")
+    emit(f"serving/{dataset}/{model_name}/tier_bronze_shed_rate",
+         b1.shed / max(b1.offered, 1) * 1e3,
+         f"{b1.shed}/{b1.offered} shed, submit p99 "
+         f"{b1.submit_ms['p99']:.2f} ms")
+    if g1.failures or g1.shed:
+        summary["failures"].append(
+            f"gold (high priority) saw {g1.failures} failures / "
+            f"{g1.shed} sheds under overload")
+    if g1.latency_ms["p99"] > 2.0 * g0.latency_ms["p99"]:
+        summary["failures"].append(
+            f"gold p99 {g1.latency_ms['p99']:.2f} ms exceeds 2x unloaded "
+            f"p99 {g0.latency_ms['p99']:.2f} ms under the overload mix")
+    if b1.shed == 0:
+        summary["failures"].append(
+            "bronze (low priority) flood was never shed — backpressure "
+            "admission is not engaging")
+    if b1.failures:
+        summary["failures"].append(
+            f"bronze saw {b1.failures} hard failures (sheds must be typed, "
+            f"not failures)")
+    if b1.submit_ms["p99"] > 20.0:
+        summary["failures"].append(
+            f"bronze submit p99 {b1.submit_ms['p99']:.1f} ms — "
+            f"low-priority admission must never block")
+    pool.close()
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=192)
@@ -187,7 +501,11 @@ if __name__ == "__main__":
     ap.add_argument("--top-k", type=int, default=10)
     ap.add_argument("--qps", type=float, default=0.0,
                     help="open-loop pacing; 0 = burst (retrace-assertable)")
+    ap.add_argument("--replicas", type=int, default=4,
+                    help="serving-tier pool size for the multi-replica gates")
+    ap.add_argument("--no-tier", action="store_true",
+                    help="skip the multi-replica serving-tier section")
     args = ap.parse_args()
     run(requests=args.requests, max_batch=args.max_batch, dim=args.dim,
         model_name=args.model, dataset=args.dataset, top_k=args.top_k,
-        qps=args.qps)
+        qps=args.qps, replicas=args.replicas, tier=not args.no_tier)

@@ -101,7 +101,15 @@ class QueryInstance:
     relations: np.ndarray  # [n_relations] int64
 
     def key(self) -> Tuple:
-        return (self.pattern, tuple(self.anchors.tolist()), tuple(self.relations.tolist()))
+        # Memoized: the serving path hashes the same instance several times
+        # (router placement, batch coalescing, materialized-cache keys) and
+        # anchors/relations never mutate after grounding.
+        k = getattr(self, "_key", None)
+        if k is None:
+            k = (self.pattern, tuple(self.anchors.tolist()),
+                 tuple(self.relations.tolist()))
+            self._key = k
+        return k
 
 
 def answer_query(kg: KnowledgeGraph, q: QueryInstance) -> Set[int]:

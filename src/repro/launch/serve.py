@@ -81,6 +81,100 @@ def serve_batch(model, params, executor, queries, top_k: int = 10,
     ], params
 
 
+def _parse_tenants(tenants_spec, mix_spec):
+    """``--tenants "gold:high,bronze:low[:quota]"`` and
+    ``--priority-mix "gold=0.25,bronze=0.75"`` -> (specs, weights).
+    With no ``--tenants``, everything rides the router's default tenant."""
+    from repro.serving import TenantSpec
+
+    if not tenants_spec:
+        return [], {}
+    specs = []
+    for part in tenants_spec.split(","):
+        bits = part.strip().split(":")
+        if len(bits) not in (2, 3):
+            raise ValueError(f"tenant spec {part!r}: want name:priority"
+                             f"[:max_inflight]")
+        quota = int(bits[2]) if len(bits) == 3 else 0
+        specs.append(TenantSpec(bits[0], bits[1], quota))
+    weights = {s.name: 1.0 for s in specs}
+    if mix_spec:
+        weights = {}
+        for part in mix_spec.split(","):
+            name, w = part.split("=")
+            weights[name.strip()] = float(w)
+        unknown = set(weights) - {s.name for s in specs}
+        if unknown:
+            raise ValueError(f"--priority-mix names unknown tenants "
+                             f"{sorted(unknown)}")
+    total = sum(weights.values())
+    return specs, {n: w / total for n, w in weights.items()}
+
+
+def _serve_tier(args, kg, model, params, ctx) -> None:
+    """Multi-replica serving tier (DESIGN.md §ServingTier): rendezvous
+    plan-cache-affinity routing over ``--replicas`` engines with per-tenant
+    priority admission and typed low-priority sheds."""
+    from repro.serving import (ReplicaPool, Router, TenantLoad, run_tenant_mix)
+
+    specs, weights = _parse_tenants(args.tenants, args.priority_mix)
+    cfg = ServingConfig(max_batch=args.max_batch,
+                        max_wait_ms=args.max_wait_ms,
+                        queue_depth=args.queue_depth, top_k=args.top_k)
+    pool = ReplicaPool(model, params, n_replicas=args.replicas, cfg=cfg,
+                       mat_budget_rows=args.materialize, ctx=ctx)
+    router = Router(pool, tenants=specs)
+    workload = make_workload(kg, args.requests, seed=7)
+
+    # Warmup compiles every signature each home replica will see (placement
+    # is deterministic, so the timed pass replays onto warm caches).
+    t0 = time.time()
+    for f in router.submit_many(workload):
+        f.result(timeout=120.0)
+    print(f"warmup: {args.requests} requests over {args.replicas} replicas "
+          f"in {time.time()-t0:.1f}s")
+    pool.reset_counters()
+
+    if specs:
+        loads = []
+        start = 0
+        for s in specs:  # contiguous weighted shares, submission-paced
+            n = max(1, int(round(weights[s.name] * len(workload))))
+            qs = (workload[start:start + n]
+                  or workload[: max(1, len(workload) // len(specs))])
+            start += len(qs)
+            loads.append(TenantLoad(s.name, qs,
+                                    qps=args.qps * weights[s.name]))
+        reports = run_tenant_mix(router, loads)
+        for name in sorted(reports):
+            print(reports[name].describe())
+    else:
+        report = run_open_loop(engine=router, queries=workload, qps=args.qps)
+        print(report.describe())
+
+    st = router.stats()
+    for rid, rs in sorted(st["pool"]["per_replica"].items()):
+        mc = rs.get("mat_cache")
+        mat = (f", mat hit rate {mc['hit_rate']:.2%}" if mc else "")
+        print(f"replica {rid}: {rs['submitted']} requests, "
+              f"{rs['batches']} micro-batches, "
+              f"{rs['retraces']} steady-state retraces{mat}")
+    print(f"router: {st['routed']} routed, {st['spilled']} spilled, "
+          f"{st['shed']} shed")
+    for name, ts in sorted(st["tenants"].items()):
+        if ts["submitted"] or ts["shed"]:
+            sheds = {r: c for r, c in ts["shed"].items() if c}
+            print(f"tenant {name} ({ts['priority']}): "
+                  f"{ts['completed']}/{ts['submitted']} completed, "
+                  f"shed {sheds or 0}, p99 {ts['latency_ms']['p99']:.1f} ms")
+    if args.metrics:
+        with MetricsSink(args.metrics) as sink:
+            sink.write({"kind": "snapshot",
+                        "metrics": get_registry().snapshot()})
+        print(f"metrics: wrote {args.metrics}")
+    router.close()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="FB15k")
@@ -149,6 +243,21 @@ def main() -> None:
                          "the timed replay (graph commit + background "
                          "incremental fine-tune) and report graph version / "
                          "stale sheds / fine-tune count")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="multi-replica serving tier (DESIGN.md "
+                         "§ServingTier): N engines with private plan/"
+                         "materialized caches behind a rendezvous-affinity "
+                         "router; 1 (default) = the single-engine path, "
+                         "byte-for-byte unchanged")
+    ap.add_argument("--tenants", default=None, metavar="SPEC",
+                    help="router tenants as name:priority[:max_inflight],"
+                         "... e.g. 'gold:high,bronze:low' — low priority is "
+                         "shed (typed, never blocking) under backpressure; "
+                         "needs --replicas")
+    ap.add_argument("--priority-mix", default=None, metavar="SPEC",
+                    help="traffic share per tenant, e.g. "
+                         "'gold=0.25,bronze=0.75' (default: equal shares); "
+                         "needs --tenants")
     ap.add_argument("--autotune-cache", default=None, metavar="PATH",
                     help="persisted kernel-tile autotune cache (DESIGN.md "
                          "§Autotuner): tuned configs load from PATH and the "
@@ -198,6 +307,23 @@ def main() -> None:
         if len(tuner):
             print(f"autotune: {len(tuner)} tuned configs loaded "
                   f"from {tuner.path}")
+
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.priority_mix and not args.tenants:
+        ap.error("--priority-mix needs --tenants")
+    if args.replicas > 1 or args.tenants:
+        # The tier composes with dense in-memory serving only: the semantic
+        # hot set is one shared device buffer and live-graph versioning is a
+        # single-engine axis (see serving/replica.py).
+        if args.semantic_store or args.live_writes or args.max_staleness:
+            ap.error("--replicas/--tenants do not compose with "
+                     "--semantic-store/--live-writes/--max-staleness "
+                     "(single-engine features)")
+        if args.no_cse:
+            ap.error("--no-cse is a single-engine ablation")
+        _serve_tier(args, kg, model, params, ctx)
+        return
 
     executor = PooledExecutor(model, b_max=256, ctx=ctx, cse=not args.no_cse)
     mat_cache = None

@@ -1,16 +1,25 @@
-"""Continuous-batching serving subsystem (DESIGN.md §Serving, §LiveStore)."""
+"""Continuous-batching serving subsystem (DESIGN.md §Serving, §LiveStore,
+§ServingTier)."""
 from repro.serving.engine import (BatchRecord, CachedScorer, ServingConfig,
                                   ServingEngine, StaleVersionError,
                                   pad_to_bucket, scorer_for, topk_desc)
 from repro.serving.live import LiveNGDB, WriteReceipt, grow_entity_rows
-from repro.serving.loadgen import (LoadReport, check_against_offline,
-                                   latency_summary, make_workload,
-                                   run_closed_loop, run_open_loop)
+from repro.serving.loadgen import (LoadReport, TenantLoad, TenantReport,
+                                   check_against_offline, latency_summary,
+                                   make_workload, run_closed_loop,
+                                   run_open_loop, run_tenant_mix)
+from repro.serving.replica import Replica, ReplicaPool
+from repro.serving.router import (Router, RouterConfig, ShedError, TenantSpec,
+                                  query_topology_key, rendezvous_rank)
 
 __all__ = [
     "BatchRecord", "CachedScorer", "ServingConfig", "ServingEngine",
     "StaleVersionError", "pad_to_bucket", "scorer_for", "topk_desc",
     "LiveNGDB", "WriteReceipt", "grow_entity_rows",
-    "LoadReport", "check_against_offline", "latency_summary",
-    "make_workload", "run_closed_loop", "run_open_loop",
+    "LoadReport", "TenantLoad", "TenantReport", "check_against_offline",
+    "latency_summary", "make_workload", "run_closed_loop", "run_open_loop",
+    "run_tenant_mix",
+    "Replica", "ReplicaPool",
+    "Router", "RouterConfig", "ShedError", "TenantSpec",
+    "query_topology_key", "rendezvous_rank",
 ]

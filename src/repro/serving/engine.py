@@ -56,6 +56,7 @@ import dataclasses
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -181,6 +182,13 @@ class ServingConfig:
     # silently served stale rows. 0 = pinned requests only survive until
     # the next write.
     max_staleness_versions: int = 0
+    # Hot-swap semantics (DESIGN.md §ServingTier): when True, every request
+    # is stamped with the params version current at ADMISSION and served on
+    # exactly those params even if ``update_params`` lands while it queues —
+    # the replica-tier swap contract (in-flight requests complete on the
+    # params they were admitted under). Off by default: the single-engine
+    # path serves whatever params are current at execute time, unchanged.
+    pin_params_on_admit: bool = False
 
 
 @dataclasses.dataclass
@@ -197,6 +205,10 @@ class _Request:
     # execute time). Pinned requests are grouped per version by the batcher
     # and served from that version's retained params snapshot.
     pin_version: Optional[int] = None
+    # Params version current at admission (``pin_params_on_admit`` only;
+    # stays 0 otherwise). Batches group per version so a swap landing
+    # mid-queue never mixes old- and new-params rows in one micro-batch.
+    params_version: int = 0
 
 
 @dataclasses.dataclass
@@ -230,9 +242,15 @@ class ServingEngine:
                  cfg: Optional[ServingConfig] = None, sem_cache=None,
                  sem_rows_fn=None, ctx=None, started: bool = True,
                  mat_cache=None, latency_window: Optional[int] = None,
-                 kg=None):
+                 kg=None, obs_labels: Optional[Dict[str, str]] = None,
+                 name: Optional[str] = None):
         self.model = model
         self.params = params
+        # ``name`` labels the batcher thread and its tracer lane (replicas
+        # pass "replica 0" etc. so lanes stay distinguishable); ``obs_labels``
+        # labels every registry metric this engine publishes (e.g.
+        # replica="0"). Both default to the historical unlabeled identity.
+        self.name = name or "serving"
         self.cfg = cfg or ServingConfig()
         if latency_window is not None:
             # Constructor-level override so callers that never build a
@@ -282,10 +300,26 @@ class ServingEngine:
             {self._graph_version: params} if kg is not None else {})
         if kg is not None:
             kg.add_invalidation_listener(self._on_kg_write)
+        # Params-version pinning (replica-tier hot swap). Mutually exclusive
+        # with the graph-version machinery (one version axis per engine; the
+        # replica tier is dense-params) and with sem staging (the device hot
+        # set is shared across params snapshots, so admitted-params replay
+        # cannot coexist with it) — explicit rather than silently wrong.
+        if self.cfg.pin_params_on_admit and (kg is not None
+                                             or sem_cache is not None):
+            raise ValueError(
+                "pin_params_on_admit does not compose with kg= or sem_cache=")
+        self._params_version = 0
+        self._params_retention = 4
+        self._params_by_version: Dict[int, object] = (
+            {0: params} if self.cfg.pin_params_on_admit else {})
         self._scorer = scorer_for(model, ctx)
         self._scorer_traces0 = self._scorer.traces
         self._sharing0 = dict(self.executor.sharing_stats())
         self._q: "queue.Queue[_Request]" = queue.Queue(maxsize=self.cfg.queue_depth)
+        # Unpack buffer for grouped admissions (``submit_many`` enqueues a
+        # whole batch as ONE queue entry); owned by the batcher thread.
+        self._pending: "deque[_Request]" = deque()
         self._stop = threading.Event()
         self._closed = False
         self._lock = threading.Lock()
@@ -293,7 +327,7 @@ class ServingEngine:
         # engine always kept, now visible in process-wide snapshots. The
         # latency ring buffer is a Histogram whose window IS
         # cfg.latency_window, reported as window_n in stats().
-        self._metrics = get_registry().group("serving")
+        self._metrics = get_registry().group("serving", **(obs_labels or {}))
         self._latency = self._metrics.histogram(
             "latency_ms", window=self.cfg.latency_window)
         self._submitted = self._metrics.counter("submitted")
@@ -363,7 +397,7 @@ class ServingEngine:
             return
         self._stop.clear()
         self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="serving-batcher")
+                                        name=f"{self.name}-batcher")
         self._thread.start()
 
     def close(self, drain: bool = True, timeout: float = 60.0) -> None:
@@ -389,12 +423,14 @@ class ServingEngine:
     def _fail_queued(self) -> None:
         try:
             while True:
-                r = self._q.get_nowait()
-                if r.trace_id:
-                    TRACER.async_end("request", r.trace_id, failed=True)
-                r.future.set_exception(RuntimeError("serving engine closed"))
-                with self._lock:
-                    self._completed += 1
+                entry = self._q.get_nowait()
+                for r in (entry if type(entry) is list else (entry,)):
+                    if r.trace_id:
+                        TRACER.async_end("request", r.trace_id, failed=True)
+                    r.future.set_exception(
+                        RuntimeError("serving engine closed"))
+                    with self._lock:
+                        self._completed += 1
         except queue.Empty:
             pass
 
@@ -444,13 +480,14 @@ class ServingEngine:
             if self._closed:
                 raise RuntimeError("serving engine is closed")
             self._submitted += 1
+            pv = self._params_version if self.cfg.pin_params_on_admit else 0
         trace_id = 0
         if TRACER.enabled:
             trace_id = TRACER.next_id()
             TRACER.async_begin("request", trace_id, pattern=query.pattern,
                                top_k=k)
         r = _Request(query, k, Future(), time.perf_counter(), trace_id,
-                     pin_version)
+                     pin_version, pv)
         try:
             self._q.put(r, timeout=timeout)
         except queue.Full:
@@ -459,7 +496,9 @@ class ServingEngine:
             if trace_id:
                 TRACER.async_end("request", trace_id, rejected=True)
             raise
-        self._queue_depth.set(self._q.qsize())
+        # The queue-depth gauge is refreshed by the batcher at every flush;
+        # updating it per admission too would cost a qsize() mutex round
+        # trip on the hot path for no extra observability.
         # close() may have stopped the batcher and drained the queue between
         # our _closed check and the put; a straggler landing in the
         # now-unwatched queue must fail, not strand its future forever.
@@ -467,15 +506,79 @@ class ServingEngine:
             self._fail_queued()
         return r.future
 
-    def submit_many(self, queries: Sequence[QueryInstance]) -> List[Future]:
-        return [self.submit(q) for q in queries]
+    def submit_many(self, queries: Sequence[QueryInstance],
+                    top_k: Optional[int] = None,
+                    timeout: Optional[float] = None) -> List[Future]:
+        """Admit a batch as ONE admission action: a single closed-check /
+        counter update under the lock and a single queue entry for the whole
+        group, so per-request admission costs (lock round trips, queue
+        handoffs) are paid once per batch instead of once per query. The
+        batcher unpacks the group in order, so batching behavior and results
+        are identical to a ``submit`` loop. All requests in a group share
+        one admission timestamp and params version — a group admits
+        atomically with respect to hot swap. The bounded queue counts a
+        group as one entry (one arrival event for backpressure purposes).
+        Graph-version pinning stays on the single-request path."""
+        if not queries:
+            return []
+        k = self.cfg.top_k if top_k is None else top_k
+        if k < 1:
+            raise ValueError(f"top_k must be >= 1, got {k}")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("serving engine is closed")
+            self._submitted += len(queries)
+            pv = self._params_version if self.cfg.pin_params_on_admit else 0
+        t0 = time.perf_counter()
+        group = []
+        for q in queries:
+            trace_id = 0
+            if TRACER.enabled:
+                trace_id = TRACER.next_id()
+                TRACER.async_begin("request", trace_id, pattern=q.pattern,
+                                   top_k=k)
+            group.append(_Request(q, k, Future(), t0, trace_id, None, pv))
+        try:
+            self._q.put(group, timeout=timeout)
+        except queue.Full:
+            with self._lock:
+                self._submitted -= len(group)
+            for r in group:
+                if r.trace_id:
+                    TRACER.async_end("request", r.trace_id, rejected=True)
+            raise
+        if self._stop.is_set():
+            self._fail_queued()
+        return [r.future for r in group]
+
+    def queue_depth(self) -> int:
+        """Entries currently waiting in the admission queue (the router's
+        spill signal — approximate by nature, exact enough for load shaping).
+        A grouped admission counts as one entry until the batcher unpacks
+        it."""
+        return self._q.qsize()
 
     # -------------------------------------------------------------- batcher
+    def _next_request(self, timeout: Optional[float]) -> _Request:
+        """Next single request for the batcher: drains the unpack buffer
+        first, then the queue; a grouped entry (``submit_many``) refills the
+        buffer. ``timeout=None`` means non-blocking. Raises ``queue.Empty``
+        exactly like ``Queue.get`` — and only when the buffer is empty, so
+        the batcher can never exit with unpacked requests stranded."""
+        if self._pending:
+            return self._pending.popleft()
+        entry = (self._q.get_nowait() if timeout is None
+                 else self._q.get(timeout=timeout))
+        if type(entry) is list:
+            self._pending.extend(entry)
+            return self._pending.popleft()
+        return entry
+
     def _run(self) -> None:
-        TRACER.set_lane("serving batcher")
+        TRACER.set_lane(f"{self.name} batcher")
         while True:
             try:
-                first = self._q.get(timeout=0.05)
+                first = self._next_request(0.05)
             except queue.Empty:
                 if self._stop.is_set():
                     return
@@ -492,13 +595,15 @@ class ServingEngine:
                     # consulting the age deadline — an expired deadline bounds
                     # additional waiting, it must not collapse a backlogged
                     # engine into size-1 batches.
-                    batch.append(self._q.get_nowait())
+                    batch.append(self._next_request(None))
                     continue
                 except queue.Empty:
                     pass
-                with self._lock:
-                    draining = self._closed
-                if draining:
+                # Unlocked read: _closed is a GIL-atomic bool that only ever
+                # flips False -> True; at worst this loop notices one 50 ms
+                # get-timeout late, which close()'s drain wait absorbs —
+                # not worth a contended lock acquisition per empty poll.
+                if self._closed:
                     flush = "drain"  # tail: don't sit out the age window
                     break
                 remaining = deadline - time.perf_counter()
@@ -506,7 +611,7 @@ class ServingEngine:
                     flush = "age"
                     break
                 try:
-                    batch.append(self._q.get(timeout=min(remaining, 0.05)))
+                    batch.append(self._next_request(min(remaining, 0.05)))
                 except queue.Empty:
                     continue
             self._queue_depth.set(self._q.qsize())
@@ -521,10 +626,13 @@ class ServingEngine:
         # Pinned requests are served per pinned version (one params snapshot
         # + one cache keyspace per micro-batch); a mixed flush splits into
         # one group per distinct pin. Unpinned requests (pin None) ride the
-        # current-version group.
-        groups: Dict[Optional[int], List[_Request]] = {}
+        # current-version group. With ``pin_params_on_admit`` the admitted
+        # params version splits the same way, so a hot swap landing between
+        # dequeue and execute never mixes params generations in one batch.
+        groups: Dict[Tuple, List[_Request]] = {}
         for r in batch:
-            groups.setdefault(r.pin_version, []).append(r)
+            groups.setdefault((r.pin_version, r.params_version),
+                              []).append(r)
         if len(groups) > 1:
             for g in groups.values():
                 self._execute_group(g, flush)
@@ -604,13 +712,20 @@ class ServingEngine:
             return
         t_done = time.perf_counter()
         n = len(batch)
+        lats = []
         for r, res in zip(batch, results):
             lat_ms = (t_done - r.t_submit) * 1e3
             res["latency_ms"] = lat_ms
             res["batch_size"] = n
-            with self._lock:
+            lats.append(lat_ms)
+        # One lock acquisition covers the whole batch's bookkeeping; futures
+        # resolve after it so a drain poll never sees completed > resolved-
+        # or-being-resolved.
+        with self._lock:
+            for lat_ms in lats:
                 self._latency.observe(lat_ms)
-                self._completed += 1
+            self._completed += n
+        for r, res, lat_ms in zip(batch, results, lats):
             # Span end precedes set_result: once the future resolves, the
             # trace must already contain the request's full b/e pair.
             if r.trace_id:
@@ -631,12 +746,20 @@ class ServingEngine:
             self.params = params
             if self.kg is not None:
                 self._version_params[self._graph_version] = params
+            if self.cfg.pin_params_on_admit:
+                # New admissions stamp the new version; requests already
+                # queued keep their admitted version and are served from the
+                # retained snapshot below (hot swap without draining).
+                self._params_version += 1
+                self._params_by_version[self._params_version] = params
+                while len(self._params_by_version) > self._params_retention:
+                    del self._params_by_version[min(self._params_by_version)]
             if self.mat_cache is not None:
                 self.mat_cache.bump_version("param_update")
 
     def _states_for(self, params, uniq: List[QueryInstance],
                     padded: List[QueryInstance], n_real: int, mat_ver: int,
-                    gv: int = -1):
+                    gv: int = -1, use_cache: bool = True):
         """Encoded states for the padded unique composition, serving rows
         out of the materialized cache where possible. The assembled array is
         bitwise what ``executor.encode(params, padded)`` would return —
@@ -651,7 +774,11 @@ class ServingEngine:
         graph snapshots can never alias, even though all pins share one
         cache ``mat_ver`` stamp (the stamp owns PARAM freshness, the key
         owns graph state)."""
-        if self.mat_cache is None:
+        if self.mat_cache is None or not use_cache:
+            # ``use_cache=False``: the batch runs on a RETAINED (pre-swap)
+            # params snapshot, while the cache stamp tracks the CURRENT
+            # params — neither its rows nor inserts from this batch would be
+            # valid, so the old-generation tail encodes around the cache.
             return self.executor.encode(params, padded, compiled=True,
                                         graph_version=gv)
         keys = [q.key() if gv < 0 else q.key() + (gv,) for q in uniq]
@@ -708,6 +835,7 @@ class ServingEngine:
         # params instead of the live handle; ``_shed_stale`` already
         # guaranteed the pin is in bound and retained.
         pin = batch[0].pin_version
+        use_mat = True
         with self._lock:
             if pin is not None:
                 params = self._version_params.get(pin)
@@ -720,6 +848,16 @@ class ServingEngine:
             else:
                 params = self.params
                 gv = self._graph_version
+            if self.cfg.pin_params_on_admit:
+                # The swap contract: serve on the params the batch was
+                # ADMITTED under (all requests share one version after
+                # grouping). An aged-out snapshot falls forward to current —
+                # retention bounds memory, and the window (4 swaps) dwarfs
+                # any realistic queue residency.
+                pv = batch[0].params_version
+                if pv != self._params_version:
+                    params = self._params_by_version.get(pv, params)
+                    use_mat = False
             mat_ver = (self.mat_cache.version
                        if self.mat_cache is not None else -1)
             lag = self._graph_version - gv if self.kg is not None else 0
@@ -738,7 +876,7 @@ class ServingEngine:
                 self.params = params
         with TRACER.span("encode", n=len(padded), graph_version=gv):
             states = self._states_for(params, uniq, padded, n_real, mat_ver,
-                                      gv)
+                                      gv, use_cache=use_mat)
         with TRACER.span("score", n=len(padded)):
             if self.sem_cache is not None:
                 scores = self.model.score_all_chunked(params, states,
@@ -750,31 +888,40 @@ class ServingEngine:
         # differently than argpartition at k, and the contract is exact
         # per-request equality with serve_batch(top_k=k). Mixed-k batches
         # are rare, so this is one topk_desc call in the common case.
+        ks = scores.shape[1]
         with TRACER.span("select", n=len(batch)):
             sel_of: Dict[Tuple[int, int], np.ndarray] = {}
             for i, r in enumerate(batch):
-                sel_of.setdefault(
-                    (row_of[i], min(r.top_k, scores.shape[1])), None)
+                sel_of.setdefault((row_of[i], min(r.top_k, ks)), None)
             by_k: Dict[int, List[int]] = {}   # k -> unique computed rows
             for row, k in sel_of:
                 by_k.setdefault(k, []).append(row)
             for k, rows in by_k.items():
-                idx = topk_desc(scores[rows], k)
+                # Unique rows appear in ascending order, so the common
+                # single-k group covers the contiguous prefix — slice (a
+                # view) instead of fancy-indexing (a copy).
+                sub = (scores[:len(rows)] if len(rows) == len(uniq)
+                       else scores[rows])
+                idx = topk_desc(sub, k)
                 for j, row in enumerate(rows):
                     sel_of[(row, k)] = idx[j]
         results: List[Optional[Dict]] = [None] * len(batch)
         log_rows: List[Optional[Dict]] = [None] * n_real
-        default_k = min(self.cfg.top_k, scores.shape[1])
+        default_k = min(self.cfg.top_k, ks)
+        # One elementwise round of the whole matrix replaces a per-request
+        # round of each selected slice — identical values (round is
+        # elementwise), one vectorized call instead of batch-size tiny ones.
+        rounded = scores.round(3)
         for i, r in enumerate(batch):
             row = row_of[i]
-            k = min(r.top_k, scores.shape[1])
+            k = min(r.top_k, ks)
             sel = sel_of[(row, k)]
             results[i] = {
                 "pattern": r.query.pattern,
                 "anchors": r.query.anchors.tolist(),
                 "relations": r.query.relations.tolist(),
                 "top_entities": sel.tolist(),
-                "scores": scores[row, sel].round(3).tolist(),
+                "scores": rounded[row, sel].tolist(),
             }
             # Log rows prefer the engine's default k: offline-oracle replay
             # (check_against_offline) serves rec.queries at ONE fixed k, so
@@ -869,6 +1016,8 @@ class ServingEngine:
                 # computation (same QueryInstance.key())
                 "coalesced": int(self._coalesced),
             }
+            if self.cfg.pin_params_on_admit:
+                out["params_version"] = self._params_version
             if self.kg is not None:
                 out["graph_version"] = self._graph_version
                 out["retained_versions"] = sorted(self._version_params)
